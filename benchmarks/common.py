@@ -1,0 +1,23 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows: us_per_call is the
+wall time of the (repeated) computation; derived is the headline number the
+paper artifact reports.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, repeats: int = 5):
+    fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn()
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

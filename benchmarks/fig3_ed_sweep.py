@@ -1,0 +1,38 @@
+"""Paper Fig. 3: Euclidean distance of normalized energy/runtime per task.
+
+Reproduces: max distance at the lowest cap (slowest AND energy-hungry
+corner, distances can exceed 1); minima in the low-mid band; ED argmin is
+Pareto-optimal (Global Criterion property)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core import (ed_argmin_is_pareto, ed_optimal_cap,
+                        euclidean_distance, measure_sweep)
+from repro.models.lsms import paper_calibrated_tasks
+
+
+def run() -> dict:
+    table = measure_sweep(paper_calibrated_tasks())
+
+    def compute():
+        return {t: euclidean_distance(table, t) for t in table.tasks()}
+
+    curves, us = timed(compute)
+    caps = {t: ed_optimal_cap(table, t) for t in table.tasks()}
+    sweep = sorted(table.caps())
+    for t, cap in caps.items():
+        emit(f"fig3_ed_cap_{t}", us, cap)
+    # lowest cap is the WORST (max distance) for busy tasks (paper Fig 3)
+    worst = max(curves["zgemm_ts64"], key=curves["zgemm_ts64"].get)
+    assert worst == sweep[0], (worst, sweep[0])
+    emit("fig3_zgemm64_worst_cap", us, worst)
+    # Pareto property of the Global Criterion argmin
+    pareto = all(ed_argmin_is_pareto(table, t) for t in table.tasks())
+    assert pareto
+    emit("fig3_all_argmin_pareto", us, pareto)
+    return {"curves": curves, "caps": caps}
+
+
+if __name__ == "__main__":
+    run()

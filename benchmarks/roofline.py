@@ -1,0 +1,109 @@
+"""Roofline analysis over the dry-run artifacts (assignment §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs   / (chips * 197e12)
+  memory term     = HLO_bytes   / (chips * 819e9)
+  collective term = coll_bytes  / (chips * 50e9)
+(all artifact numbers are per-device from the SPMD program, so the formulas
+reduce to per-device / per-chip-peak)
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs useful ratio, and a roofline
+fraction = model-flops-time / dominant-term-time (how close the step is to
+the best achievable on the dominant resource)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.hw.tpu import DEFAULT_CHIP
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def analyze_record(rec: dict, chip=DEFAULT_CHIP) -> dict:
+    compute_s = rec["flops_per_device"] / chip.peak_flops_bf16
+    memory_s = rec["bytes_per_device"] / chip.hbm_bandwidth
+    coll_s = rec["coll_bytes_per_device"] / chip.ici_bandwidth
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    hlo_flops_global = rec["flops_per_device"] * rec["chips"]
+    model_flops = rec.get("model_flops_global", 0.0)
+    useful = model_flops / hlo_flops_global if hlo_flops_global > 0 else 0.0
+
+    # ideal step time: the analytic minimum work on EITHER resource
+    # (model flops at peak MXU, or model bytes at peak HBM) — whichever is
+    # larger is the true roofline bound for this cell.
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_model_config
+    from repro.hw.flops import model_bytes
+    mbytes = rec.get("model_bytes_global")
+    if mbytes is None:
+        mbytes = model_bytes(get_model_config(rec["arch"]),
+                             SHAPES[rec["shape"]])
+    ideal_s = max(model_flops / (rec["chips"] * chip.peak_flops_bf16),
+                  mbytes / (rec["chips"] * chip.hbm_bandwidth))
+    frac = ideal_s / terms[dominant] if terms[dominant] > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "rules": rec.get("rules", "?"),
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "useful_ratio": useful, "roofline_fraction": min(frac, 1.0),
+        "ideal_s": ideal_s,
+        "step_s_bound": max(terms.values()),
+    }
+
+
+def load_all(directory: str = ARTIFACT_DIR, pattern: str = "*.json"
+             ) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(directory, pattern))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(records=None, mesh: str | None = "16x16") -> list[dict]:
+    records = records if records is not None else load_all()
+    rows = [analyze_record(r) for r in records
+            if mesh is None or r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':25s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'bound':>10s} "
+           f"{'useful':>7s} {'roofline':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:25s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:10.4f} {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.3f} {r['roofline_fraction']:9.3f}")
+    return "\n".join(lines)
+
+
+def run() -> dict:
+    rows = table(mesh=None)
+    if not rows:
+        emit("roofline_cells", 0.0, 0)
+        return {"rows": []}
+    emit("roofline_cells", 0.0, len(rows))
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    emit("roofline_worst_cell", 0.0,
+         f"{worst['arch']}/{worst['shape']}/{worst['mesh']}"
+         f"={worst['roofline_fraction']:.3f}")
+    coll_bound = [r for r in rows if r["dominant"] == "collective"]
+    emit("roofline_collective_bound_cells", 0.0, len(coll_bound))
+    mean_frac = sum(r["roofline_fraction"] for r in rows) / len(rows)
+    emit("roofline_mean_fraction", 0.0, round(mean_frac, 3))
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    print(format_table(table(mesh=None)))
+    run()

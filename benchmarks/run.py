@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure (+ roofline and the
+beyond-paper steering policy).  Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (cell_caps, fig1_power_trace, fig2_sed_sweep,
+                        fig3_ed_sweep, roofline, steering_policy,
+                        table1_task_profile, table2_optimal_caps)
+
+BENCHES = [
+    ("table1", table1_task_profile),
+    ("fig2", fig2_sed_sweep),
+    ("fig3", fig3_ed_sweep),
+    ("table2", table2_optimal_caps),
+    ("fig1", fig1_power_trace),
+    ("steering", steering_policy),
+    ("roofline", roofline),
+    ("cell_caps", cell_caps),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in BENCHES:
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

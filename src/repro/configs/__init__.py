@@ -1,0 +1,4 @@
+from repro.configs.base import (ModelConfig, RunConfig, ShapeConfig, SHAPES,
+                                reduced)
+
+__all__ = ["ModelConfig", "RunConfig", "ShapeConfig", "SHAPES", "reduced"]

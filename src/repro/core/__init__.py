@@ -1,0 +1,30 @@
+"""The paper's primary contribution: task-granular power-capping evaluation.
+
+  tasks.py        Task / TaskMeasurement / TaskTable (paper Table 1 analogue)
+  power_model.py  (task, cap) -> (runtime, energy) via DVFS + power steering
+  metrics.py      speedup-energy-delay, Euclidean-distance, GPS-UP
+  steering.py     per-task cap selection + CapSchedule for the train loop
+  trace.py        5 ms synthetic power trace (paper Fig. 1)
+"""
+
+from repro.core.tasks import Task, TaskMeasurement, TaskTable
+from repro.core.power_model import NoiseModel, measure_sweep, simulate_task
+from repro.core.metrics import (speedup_energy_delay, sed_optimal_cap,
+                                euclidean_distance, ed_optimal_cap,
+                                ed_argmin_is_pareto, gps_up, GpsUp,
+                                table2, aggregate_table2, Table2Row,
+                                weighted_application_impact)
+from repro.core.steering import (PowerSteeringController, SteeringGoal,
+                                 CapSchedule, CapDecision)
+from repro.core.trace import generate_trace, PowerTrace, TracePoint
+
+__all__ = [
+    "Task", "TaskMeasurement", "TaskTable",
+    "NoiseModel", "measure_sweep", "simulate_task",
+    "speedup_energy_delay", "sed_optimal_cap",
+    "euclidean_distance", "ed_optimal_cap", "ed_argmin_is_pareto",
+    "gps_up", "GpsUp", "table2", "aggregate_table2", "Table2Row",
+    "weighted_application_impact",
+    "PowerSteeringController", "SteeringGoal", "CapSchedule", "CapDecision",
+    "generate_trace", "PowerTrace", "TracePoint",
+]

@@ -1,0 +1,115 @@
+"""Task model: the paper's unit of power-capping analysis.
+
+A *task* is a recurring computational region (the paper's GPU kernels and the
+'gpu compute idle' phase).  In this framework tasks come from two sources:
+
+  1. model phases segmented out of a training/serving step (attention, MoE
+     dispatch, expert GEMM, SSD scan, optimizer update, host/input idle), with
+     roofline terms derived from the compiled dry-run, and
+  2. the LSMS-analogue SCF workload (examples/lsms_scf.py) whose task names
+     mirror the paper's Table 1 rows.
+
+``TaskMeasurement`` is one (task x cap) observation; ``TaskTable`` is the
+paper's Table-1-style collection at a fixed cap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable
+
+from repro.hw.dvfs import WorkProfile
+from repro.hw.tpu import ChipSpec, DEFAULT_CHIP
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """A recurring computational region with per-call roofline terms."""
+
+    name: str
+    flops: float                 # per call, on the accelerator
+    hbm_bytes: float             # per call
+    calls: int = 1
+    coll_bytes: float = 0.0      # per call, over ICI
+    host_flops: float = 0.0      # host-side work during this task (idle phases)
+    host_seconds: float = 0.0    # explicit host-time alternative to host_flops
+
+    def work_profile(self, chip: ChipSpec = DEFAULT_CHIP) -> WorkProfile:
+        return WorkProfile(
+            t_compute=self.flops / chip.peak_flops_bf16,
+            t_mem=self.hbm_bytes / chip.hbm_bandwidth,
+            t_coll=self.coll_bytes / chip.ici_bandwidth,
+            mem_f_knee=chip.mem_f_knee,
+        )
+
+    @property
+    def is_idle(self) -> bool:
+        return self.flops == 0 and self.hbm_bytes == 0 and self.coll_bytes == 0
+
+    def boundedness(self, chip: ChipSpec = DEFAULT_CHIP) -> str:
+        return "idle" if self.is_idle else self.work_profile(chip).boundedness
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskMeasurement:
+    """One (task, cap) observation: the paper's primitive data point."""
+
+    task: str
+    cap: float          # superchip cap, W
+    runtime: float      # total seconds across all calls
+    energy: float       # total joules across all calls
+    clock_fraction: float = 1.0
+
+    @property
+    def avg_power(self) -> float:
+        return self.energy / self.runtime if self.runtime > 0 else 0.0
+
+
+class TaskTable:
+    """Measurements for many tasks across the cap sweep."""
+
+    def __init__(self, measurements: Iterable[TaskMeasurement]):
+        self.rows: list[TaskMeasurement] = list(measurements)
+
+    # -- access ----------------------------------------------------------
+    def tasks(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for r in self.rows:
+            seen.setdefault(r.task, None)
+        return list(seen)
+
+    def caps(self) -> list[float]:
+        return sorted({r.cap for r in self.rows})
+
+    def at(self, task: str, cap: float) -> TaskMeasurement:
+        for r in self.rows:
+            if r.task == task and r.cap == cap:
+                return r
+        raise KeyError((task, cap))
+
+    def for_task(self, task: str) -> list[TaskMeasurement]:
+        return sorted((r for r in self.rows if r.task == task),
+                      key=lambda r: r.cap)
+
+    def baseline(self, task: str) -> TaskMeasurement:
+        """The default (highest) cap row — the paper's 1000 W baseline."""
+        return self.for_task(task)[-1]
+
+    # -- io ----------------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps([dataclasses.asdict(r) for r in self.rows], indent=1)
+
+    @classmethod
+    def from_json(cls, text: str) -> "TaskTable":
+        return cls(TaskMeasurement(**d) for d in json.loads(text))
+
+    def table1(self, cap: float | None = None) -> list[dict]:
+        """Paper Table-1 analogue at the default (or given) cap, sorted by
+        total energy descending."""
+        cap = cap if cap is not None else max(self.caps())
+        rows = [r for r in self.rows if r.cap == cap]
+        rows.sort(key=lambda r: -r.energy)
+        return [{"task": r.task, "total_time_s": r.runtime,
+                 "total_energy_j": r.energy, "avg_power_w": r.avg_power}
+                for r in rows]

@@ -1,0 +1,9 @@
+from repro.hw.tpu import (ChipSpec, HostSpec, SuperchipSpec, PodSpec,
+                          DEFAULT_CHIP, DEFAULT_HOST, DEFAULT_SUPERCHIP)
+from repro.hw.dvfs import WorkProfile, chip_power, clock_for_cap, idle_power
+
+__all__ = [
+    "ChipSpec", "HostSpec", "SuperchipSpec", "PodSpec",
+    "DEFAULT_CHIP", "DEFAULT_HOST", "DEFAULT_SUPERCHIP",
+    "WorkProfile", "chip_power", "clock_for_cap", "idle_power",
+]

@@ -1,0 +1,240 @@
+"""Flash attention Pallas TPU kernel (online softmax, VMEM-tiled).
+
+TPU-native adaptation notes (vs the CUDA flash-attention algorithm):
+  * tiling targets VMEM (≈128 MiB) instead of SM shared memory: the q block
+    (block_q x D), one k/v block (block_kv x D) and the f32 accumulator live
+    in VMEM; block sizes default to MXU-aligned multiples of 128;
+  * the kv-block loop is the innermost ("arbitrary") grid dimension so the
+    running max/denominator/accumulator persist in VMEM scratch across
+    sequential grid steps — no atomics / warp shuffles needed;
+  * causal + sliding-window masks skip fully-masked kv blocks via pl.when,
+    which on TPU elides the whole DMA+compute for that grid step;
+  * GQA is expressed in the k/v BlockSpec index_map (q-head -> kv-head), so
+    no repeated K/V materialization.
+
+Supports: causal / bidirectional, sliding-window (gemma2 local layers),
+logit softcap (gemma2), GQA, single-token flash-decode over a KV cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+try:
+    _CompilerParams = pltpu.CompilerParams
+except AttributeError:                                 # older jax
+    _CompilerParams = pltpu.TPUCompilerParams
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale, causal, local_window, softcap, sk_actual, block_q,
+                 block_kv, nkv):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_kv
+
+    # block-level skip: fully-masked kv blocks do no work at all
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (k_start <= q_start + block_q - 1)
+        if local_window is not None:
+            # newest q in block is q_start+block_q-1; oldest visible k is
+            # q - window + 1; block is dead if its last k < that
+            run = run & (k_start + block_kv - 1
+                         >= q_start - (local_window - 1))
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale     # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (bkv, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+        mask = k_pos < sk_actual
+        if causal:
+            mask &= q_pos >= k_pos
+        if local_window is not None:
+            mask &= q_pos - k_pos < local_window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "local_window", "softcap", "scale", "block_q", "block_kv",
+    "interpret"))
+def flash_attention(q, k, v, *, causal=True, local_window=None, softcap=None,
+                    scale=None, block_q=512, block_kv=1024, interpret=False):
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D) with H % K == 0."""
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, max(Sq, 8))
+    block_kv = min(block_kv, max(Sk, 8))
+    qp = _pad_to(q, 1, block_q)
+    kp = _pad_to(k, 1, block_kv)
+    vp = _pad_to(v, 1, block_kv)
+    nq = qp.shape[1] // block_q
+    nkv = kp.shape[1] // block_kv
+    g = H // K
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, local_window=local_window,
+        softcap=softcap, sk_actual=Sk, block_q=block_q, block_kv=block_kv,
+        nkv=nkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D),
+                         lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D),
+                         lambda b, h, iq, ik, g=g: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, block_kv, 1, D),
+                         lambda b, h, iq, ik, g=g: (b, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# flash-decode: one new token against a long KV cache
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale, softcap, local_window, block_kv, nkv):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+    k_start = ik * block_kv
+
+    @pl.when(k_start < kv_len)
+    def _body():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale    # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G,bkv)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        mask = k_pos < kv_len
+        if local_window is not None:
+            mask &= k_pos > kv_len - 1 - local_window
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "softcap", "local_window", "scale", "block_kv", "interpret"))
+def flash_decode(q, k_cache, v_cache, kv_len, *, softcap=None,
+                 local_window=None, scale=None, block_kv=1024,
+                 interpret=False):
+    """q: (B, 1, H, D); caches: (B, S, K, D); kv_len: (B,) int32."""
+    B, Sq, H, D = q.shape
+    assert Sq == 1, "flash_decode is single-token; use flash_attention"
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    block_kv = min(block_kv, max(S, 8))
+    kp = _pad_to(k_cache, 1, block_kv)
+    vp = _pad_to(v_cache, 1, block_kv)
+    nkv = kp.shape[1] // block_kv
+    g = H // K
+    qg = q.reshape(B, K, g, D)      # group q by kv head
+
+    kernel = functools.partial(_decode_kernel, scale=scale, softcap=softcap,
+                               local_window=local_window, block_kv=block_kv,
+                               nkv=nkv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, K, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1,), lambda b, h, ik: (b,),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, g, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qg, kp, vp, kv_len.astype(jnp.int32))
+    return out.reshape(B, 1, H, D)

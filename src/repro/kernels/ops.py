@@ -1,0 +1,71 @@
+"""Jit'd dispatch wrappers around the Pallas kernels and their jnp references.
+
+``mode`` selects the execution path:
+  reference          pure-jnp (XLA) — CPU smoke tests + the dry-run lowering
+  pallas             real TPU Pallas kernels (target hardware)
+  pallas_interpret   Pallas kernel body executed in Python on CPU — used by
+                     the test suite to validate kernels against ref.py
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def attention(q, k, v, *, causal=True, local_window=None, softcap=None,
+              scale=None, mode="reference", block_q=512, block_kv=1024,
+              naive_below=2049):
+    """GQA attention dispatch. q: (B,S,H,D); k/v: (B,S,K,D)."""
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import flash_attention
+        return flash_attention.flash_attention(
+            q, k, v, causal=causal, local_window=local_window,
+            softcap=softcap, scale=scale, block_q=block_q, block_kv=block_kv,
+            interpret=(mode == "pallas_interpret"))
+    if q.shape[1] < naive_below and k.shape[1] < naive_below:
+        return ref.attention_naive(q, k, v, causal=causal,
+                                   local_window=local_window,
+                                   softcap=softcap, scale=scale)
+    return ref.attention_blockwise(q, k, v, causal=causal,
+                                   local_window=local_window,
+                                   softcap=softcap, scale=scale,
+                                   block_kv=block_kv)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, softcap=None,
+                     local_window=None, scale=None, mode="reference",
+                     block_kv=1024):
+    """One-token decode attention over a (B,S,K,D) cache."""
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import flash_attention
+        return flash_attention.flash_decode(
+            q, k_cache, v_cache, kv_len, softcap=softcap,
+            local_window=local_window, scale=scale, block_kv=block_kv,
+            interpret=(mode == "pallas_interpret"))
+    return ref.decode_attention_ref(q, k_cache, v_cache, kv_len,
+                                    softcap=softcap,
+                                    local_window=local_window, scale=scale)
+
+
+def ssd(x, dt, A, B, C, D=None, h0=None, *, chunk=128, mode="reference"):
+    """Mamba-2 SSD scan. Returns (y, final_state)."""
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import ssd as ssd_kernel
+        return ssd_kernel.ssd(x, dt, A, B, C, D, h0=h0, chunk=chunk,
+                              interpret=(mode == "pallas_interpret"))
+    return ref.ssd_chunked(x, dt, A, B, C, D, h0=h0, chunk=chunk)
+
+
+def grouped_matmul(lhs, rhs, *, mode="reference", block_m=128, block_k=512,
+                   block_n=512):
+    """MoE expert GEMM: (G,M,K) x (G,K,N) -> (G,M,N)."""
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import grouped_matmul as gmm
+        return gmm.grouped_matmul(lhs, rhs, block_m=block_m, block_k=block_k,
+                                  block_n=block_n,
+                                  interpret=(mode == "pallas_interpret"))
+    return ref.grouped_matmul_ref(lhs, rhs)

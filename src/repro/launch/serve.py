@@ -1,0 +1,53 @@
+"""Serving launcher: batched generation with per-phase power capping.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \
+      --requests 8 --new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import reduced as reduce_cfg
+from repro.configs.registry import ARCH_IDS, get_model_config, get_run_config
+from repro.models import lm
+from repro.models.layers import Ctx
+from repro.models.params import init_params
+from repro.serving.engine import Request, ServeEngine
+from repro.sharding import RULE_SETS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_model_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    if cfg.family == "audio":
+        raise SystemExit("encoder-only arch has no decode path")
+    run = get_run_config(args.arch, remat="none", logits_chunk=64)
+    ctx = Ctx(run, RULE_SETS[run.serve_rules_name], None)
+    params = init_params(lm.model_decls(cfg), jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, run, ctx, params,
+                         batch_size=args.batch_size, max_seq=args.max_seq)
+    reqs = [Request(uid=i, prompt=[(5 * i + j) % cfg.vocab
+                                   for j in range(4 + i % 5)],
+                    max_new_tokens=args.new)
+            for i in range(args.requests)]
+    done = engine.generate(reqs)
+    for r in done:
+        print(f"req {r.uid}: {len(r.generated)} tokens -> "
+              f"{r.generated[:8]}{'...' if len(r.generated) > 8 else ''}")
+
+
+if __name__ == "__main__":
+    main()

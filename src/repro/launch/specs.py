@@ -1,0 +1,75 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, plus the
+matching logical-axis trees — the dry-run lowers against these (weak-type
+correct, shardable, zero device allocation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import lm
+from repro.models.layers import Ctx
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                with_labels: bool) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct tree, logical-axes tree) for one input batch."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    specs: dict = {}
+    axes: dict = {}
+    if cfg.family == "audio":
+        specs["frames"] = sds((B, S, cfg.frontend_dim), jnp.bfloat16)
+        axes["frames"] = ("act_batch", "act_seq", "frontend")
+    else:
+        specs["tokens"] = sds((B, S), jnp.int32)
+        axes["tokens"] = ("act_batch", "act_seq")
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = sds((B, cfg.vision_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+        axes["vision_embeds"] = ("act_batch", None, "act_embed")
+        specs["positions"] = sds((3, B, S), jnp.int32)
+        axes["positions"] = (None, "act_batch", "act_seq")
+    if with_labels:
+        specs["labels"] = sds((B, S), jnp.int32)
+        axes["labels"] = ("act_batch", "act_seq")
+    return specs, axes
+
+
+def input_specs(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig,
+                ctx: Ctx):
+    """Returns (args_specs: tuple, args_axes: tuple, donate: tuple[int,...])
+    for the step function matching shape.kind."""
+    from repro.train.step import abstract_state, state_logical_axes
+    from repro.models.params import abstract_params, logical_axes
+
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        state = abstract_state(cfg, run)
+        st_axes = state_logical_axes(cfg, run)
+        batch, b_axes = batch_specs(cfg, shape, with_labels=True)
+        return (state, batch), (st_axes, b_axes), (0,)
+
+    # serving holds bf16 weights (deployment checkpoints are compute-dtype;
+    # f32 masters would double the parameter HBM traffic per step)
+    cdtype = jnp.dtype(run.compute_dtype)
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cdtype),
+        abstract_params(lm.model_decls(cfg)))
+    p_axes = logical_axes(lm.model_decls(cfg))
+    if shape.kind == "prefill":
+        batch, b_axes = batch_specs(cfg, shape, with_labels=False)
+        return (params, batch), (p_axes, b_axes), ()
+
+    if shape.kind == "decode":
+        B, S = shape.global_batch, shape.seq_len
+        cache = lm.init_cache(ctx, cfg, B, S, abstract=True)
+        c_axes = lm.cache_logical_axes(cfg)
+        tokens = sds((B, 1), jnp.int32)
+        index = sds((), jnp.int32)
+        return ((params, cache, tokens, index),
+                (p_axes, c_axes, ("act_batch", None), ()), (1,))
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,484 @@
+"""Unified LM assembly for all 10 assigned architectures.
+
+One declarative parameter tree + one forward covering:
+
+  dense       pre-norm decoder (llama3.2, minitron, nemotron-4) with optional
+              post-norms / softcaps / local-global alternation (gemma2)
+  moe         every-layer token-choice top-k MoE (phi3.5-moe, olmoe)
+  ssm         mamba-2 (SSD) attention-free stack (mamba2-370m)
+  hybrid      mamba-2 backbone + SHARED attention block applied periodically
+              with per-invocation LoRA (zamba2)
+  audio       encoder-only transformer over precomputed frame embeddings
+              (hubert-xlarge; frontend is a stub per the assignment)
+  vlm         decoder with M-RoPE; precomputed patch embeddings merged into
+              the token stream (qwen2-vl; frontend is a stub)
+
+Layers are scan-stacked (jax.lax.scan over the leading "layers" dim) so the
+HLO stays one-layer-sized for 80-layer models; remat policy wraps the body.
+
+Forward modes:
+  forward(...)                     full-sequence hidden states (train/prefill)
+  forward(..., cache, cache_index) single/multi-token decode step
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import PD
+
+
+# ===========================================================================
+# declarations
+# ===========================================================================
+
+def _tf_layer_decls(cfg: ModelConfig, n: int, moe: bool) -> dict:
+    d = {
+        "ln1": L.norm_decls(cfg, layers=n),
+        "attn": L.attention_decls(cfg, layers=n),
+        "ln2": L.norm_decls(cfg, layers=n),
+        "mlp": L.moe_decls(cfg, layers=n) if moe else L.mlp_decls(cfg, layers=n),
+    }
+    if cfg.post_norms:
+        d["post_ln1"] = L.norm_decls(cfg, layers=n)
+        d["post_ln2"] = L.norm_decls(cfg, layers=n)
+    return d
+
+
+def _shared_attn_decls(cfg: ModelConfig, n_inv: int) -> dict:
+    """Zamba2 shared transformer block over concat(h, emb) (width 2*d_model),
+    plus per-invocation LoRA adapters on the q projection."""
+    d2 = 2 * cfg.d_model
+    r = cfg.shared_attn_lora or 32
+    return {
+        "ln1": L.norm_decls(cfg, d=d2),
+        "attn": L.attention_decls(cfg, d_in=d2),
+        "ln2": L.norm_decls(cfg, d=d2),
+        "mlp": {
+            "w_up": PD((d2, cfg.d_ff), ("embed", "mlp")),
+            "w_gate": PD((d2, cfg.d_ff), ("embed", "mlp")),
+            "w_down": PD((cfg.d_ff, cfg.d_model), ("mlp", "embed")),
+        },
+        "lora_a": PD((n_inv, d2, r), ("layers", "embed", "lora"),
+                     scale=d2 ** -0.5),
+        "lora_b": PD((n_inv, r, cfg.n_heads * cfg.head_dim),
+                     ("layers", "lora", "qkv_flat"), "zeros"),
+    }
+
+
+def zamba_structure(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_super, mamba_per_super, trailing) with
+    n_super*mamba_per_super + trailing == n_layers."""
+    period = max(cfg.shared_attn_period, 1)
+    n_super = cfg.n_layers // period
+    trailing = cfg.n_layers - n_super * period
+    return n_super, period, trailing
+
+
+def model_decls(cfg: ModelConfig) -> dict:
+    d: dict[str, Any] = {}
+    if cfg.family == "audio":
+        d["frontend"] = {
+            "proj": PD((cfg.frontend_dim, cfg.d_model), ("frontend", "embed")),
+            "pos": PD((cfg.max_wavelength_pos, cfg.d_model),
+                      (None, "embed"), "embed", scale=0.02),
+        }
+    else:
+        d["embed"] = L.embed_decls(cfg)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        moe = cfg.n_experts > 0
+        if cfg.layer_pattern == "local_global":
+            half = cfg.n_layers // 2
+            d["layers_local"] = _tf_layer_decls(cfg, half, moe)
+            d["layers_global"] = _tf_layer_decls(cfg, half, moe)
+        else:
+            d["layers"] = _tf_layer_decls(cfg, cfg.n_layers, moe)
+    elif cfg.family == "ssm":
+        d["layers"] = {"ln": L.norm_decls(cfg, layers=cfg.n_layers),
+                       "mamba": L.mamba_decls(cfg, layers=cfg.n_layers)}
+    elif cfg.family == "hybrid":
+        n_super, per, trailing = zamba_structure(cfg)
+        d["layers"] = {"ln": L.norm_decls(cfg, layers=cfg.n_layers),
+                       "mamba": L.mamba_decls(cfg, layers=cfg.n_layers)}
+        d["shared"] = _shared_attn_decls(cfg, n_super)
+    else:
+        raise ValueError(cfg.family)
+
+    d["final_norm"] = L.norm_decls(cfg)
+    ue = L.unembed_decls(cfg)
+    if ue:
+        d["unembed"] = ue
+    return d
+
+
+# ===========================================================================
+# forward
+# ===========================================================================
+
+def _remat(ctx: L.Ctx, fn):
+    if ctx.run.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if ctx.run.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _stack_scan(ctx: L.Ctx, body, carry, xs):
+    """lax.scan over stacked layer params, or a python unroll when
+    run.scan_layers=False (used by the dry-run's cost-extrapolation variants
+    and available as a compile-size/perf lever)."""
+    if ctx.run.scan_layers:
+        return jax.lax.scan(body, carry, xs, unroll=ctx.run.scan_unroll)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        y_stack = jax.tree.map(lambda *a: jnp.stack(a, 0), *ys)
+    else:
+        y_stack = ys[0] if ys else None
+    return carry, y_stack
+
+
+def _tf_block(ctx: L.Ctx, cfg: ModelConfig, p, h, cos, sin, *,
+              local_window=None, cache=None, cache_index=None):
+    """One transformer block; returns (h, new_cache, aux)."""
+    post = "post_ln1" in p
+    a_in = L.apply_norm(cfg, p["ln1"], h)
+    attn_out, new_cache = L.apply_attention(
+        ctx, cfg, p["attn"], a_in, cos, sin, local_window=local_window,
+        cache=cache, cache_index=cache_index)
+    if post:
+        attn_out = L.apply_norm(cfg, p["post_ln1"], attn_out)
+    # NOTE: do NOT pin the residual adds with sharding constraints — it
+    # costs ~17 % extra accounted traffic fleet-wide and the multi-pod MoE
+    # backward gathers were fixed at the shard_map boundary instead
+    # (local token flattening; EXPERIMENTS.md §Perf C3).
+    h = h + attn_out
+    m_in = L.apply_norm(cfg, p["ln2"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        mlp_out, aux = L.apply_moe(ctx, cfg, p["mlp"], m_in)
+    else:
+        mlp_out = L.apply_mlp(ctx, cfg, p["mlp"], m_in)
+    if post:
+        mlp_out = L.apply_norm(cfg, p["post_ln2"], mlp_out)
+    return h + mlp_out, new_cache, aux
+
+
+def _scan_tf_layers(ctx: L.Ctx, cfg: ModelConfig, stack, h, cos, sin, *,
+                    local_window=None, cache=None, cache_index=None):
+    """Scan one homogeneous transformer stack.  cache: stacked kv or None."""
+
+    def body(carry, xs):
+        h, aux = carry
+        p, c = xs
+        h, new_c, a = _tf_block(ctx, cfg, p, h, cos, sin,
+                                local_window=local_window, cache=c,
+                                cache_index=cache_index)
+        return (h, aux + a), new_c
+
+    body = _remat(ctx, body)
+    (h, aux), new_cache = _stack_scan(
+        ctx, body, (h, jnp.zeros((), jnp.float32)), (stack, cache))
+    return h, aux, new_cache
+
+
+def _positions_default(batch: int, seq: int, cache_index=None):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :]
+    if cache_index is not None:
+        pos = pos + cache_index
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def forward(ctx: L.Ctx, cfg: ModelConfig, params, batch: dict, *,
+            cache=None, cache_index=None):
+    """Returns (hidden (B,S,D), aux_loss, new_cache)."""
+    if cfg.family == "audio":
+        frames = batch["frames"].astype(ctx.cdtype)
+        B, S = frames.shape[:2]
+        h = jnp.einsum("bsf,fd->bsd", frames,
+                       params["frontend"]["proj"].astype(ctx.cdtype))
+        pos_tab = jax.lax.dynamic_slice_in_dim(
+            params["frontend"]["pos"], 0, S, axis=0)
+        h = h + pos_tab[None].astype(ctx.cdtype)
+        h = ctx.cst(h, "act_batch", "act_seq", "act_embed")
+        positions = _positions_default(B, S)
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = L.apply_embed(ctx, cfg, params["embed"], tokens)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            # frontend stub: precomputed patch embeddings replace the leading
+            # token positions (train + prefill; decode batches omit them)
+            ve = batch["vision_embeds"].astype(ctx.cdtype)
+            h = jax.lax.dynamic_update_slice(h, ve, (0, 0, 0))
+        positions = batch.get("positions")
+        if positions is None:
+            positions = _positions_default(B, S, cache_index)
+            if cfg.mrope_sections is not None:
+                positions = jnp.broadcast_to(positions[None], (3, B, S))
+
+    cos, sin = (L.rope_cos_sin(cfg, positions) if cfg.use_rope
+                else (None, None))
+
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if cfg.layer_pattern == "local_global":
+            # gemma2: scan over (local, global) pairs
+            def body(carry, xs):
+                h, aux = carry
+                (pl, pg), (cl, cg) = xs
+                h, ncl, a1 = _tf_block(ctx, cfg, pl, h, cos, sin,
+                                       local_window=cfg.local_window,
+                                       cache=cl, cache_index=cache_index)
+                h, ncg, a2 = _tf_block(ctx, cfg, pg, h, cos, sin,
+                                       local_window=None,
+                                       cache=cg, cache_index=cache_index)
+                return (h, aux + a1 + a2), (ncl, ncg)
+
+            body = _remat(ctx, body)
+            cl = cache["kv_local"] if cache is not None else None
+            cg = cache["kv_global"] if cache is not None else None
+            (h, aux), pair_caches = _stack_scan(
+                ctx, body, (h, aux),
+                ((params["layers_local"], params["layers_global"]), (cl, cg)))
+            ncl, ncg = (pair_caches if pair_caches is not None
+                        else (None, None))
+            if cache is not None:
+                new_cache = {"kv_local": ncl, "kv_global": ncg}
+        else:
+            kv = cache["kv"] if cache is not None else None
+            h, aux, nkv = _scan_tf_layers(ctx, cfg, params["layers"], h,
+                                          cos, sin, cache=kv,
+                                          cache_index=cache_index)
+            if cache is not None:
+                new_cache = {"kv": nkv}
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            p, st = xs
+            x_in = L.apply_norm(cfg, p["ln"], h)
+            ssm = st["ssm"] if st is not None else None
+            conv = st["conv"] if st is not None else None
+            out, (new_ssm, new_conv) = L.apply_mamba(
+                ctx, cfg, p["mamba"], x_in, ssm_state=ssm, conv_state=conv)
+            new_st = ({"ssm": new_ssm, "conv": new_conv}
+                      if st is not None else None)
+            return h + out, new_st
+
+        body = _remat(ctx, body)
+        st = cache["mamba"] if cache is not None else None
+        h, new_st = _stack_scan(ctx, body, h, (params["layers"], st))
+        if cache is not None:
+            new_cache = {"mamba": new_st}
+
+    elif cfg.family == "hybrid":
+        h, aux, new_cache = _zamba_forward(ctx, cfg, params, h, cos, sin,
+                                           cache=cache,
+                                           cache_index=cache_index)
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    return h, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid
+# ---------------------------------------------------------------------------
+
+def _mamba_segment(ctx, cfg, stack, h, st):
+    def body(h, xs):
+        p, s = xs
+        x_in = L.apply_norm(cfg, p["ln"], h)
+        ssm = s["ssm"] if s is not None else None
+        conv = s["conv"] if s is not None else None
+        out, (new_ssm, new_conv) = L.apply_mamba(
+            ctx, cfg, p["mamba"], x_in, ssm_state=ssm, conv_state=conv)
+        new_s = {"ssm": new_ssm, "conv": new_conv} if s is not None else None
+        return h + out, new_s
+
+    body = _remat(ctx, body)
+    return _stack_scan(ctx, body, h, (stack, st))
+
+
+def _shared_block(ctx, cfg, p, inv_idx, h, emb0, cos, sin, *,
+                  cache=None, cache_index=None):
+    """Zamba2 shared attention block on concat(h, emb0), with per-invocation
+    LoRA on q."""
+    c = ctx.cdtype
+    xcat = jnp.concatenate([h, emb0], axis=-1)
+    a_in = L.apply_norm(cfg, p["ln1"], xcat)
+    # LoRA delta on q for this invocation
+    la = p["lora_a"][inv_idx].astype(c)
+    lb = p["lora_b"][inv_idx].astype(c)
+    B, S = a_in.shape[:2]
+    q_delta = (a_in @ la @ lb).reshape(B, S, cfg.n_heads, cfg.head_dim)
+
+    # attention with q = Wq x + LoRA(x)
+    attn_p = dict(p["attn"])
+    out, new_cache = _attention_with_qdelta(
+        ctx, cfg, attn_p, a_in, q_delta, cos, sin, cache=cache,
+        cache_index=cache_index)
+    h = h + out
+    m_in = L.apply_norm(cfg, p["ln2"], jnp.concatenate([h, emb0], axis=-1))
+    gate = jnp.einsum("bsd,df->bsf", m_in, p["mlp"]["w_gate"].astype(c))
+    up = jnp.einsum("bsd,df->bsf", m_in, p["mlp"]["w_up"].astype(c))
+    up = ctx.cst(up, "act_batch", "act_seq", "act_mlp")
+    mlp_out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up,
+                         p["mlp"]["w_down"].astype(c))
+    return h + mlp_out, new_cache
+
+
+def _attention_with_qdelta(ctx, cfg, p, x, q_delta, cos, sin, *,
+                           cache=None, cache_index=None):
+    c = ctx.cdtype
+    B, S = x.shape[:2]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(c)
+                   ).reshape(B, S, H, hd) + q_delta
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(c)).reshape(B, S, K, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(c)).reshape(B, S, K, hd)
+    q = ctx.cst(q, "act_batch", "act_seq", "act_heads", None)
+    if cfg.use_rope:
+        q = L.apply_rope(q, cos, sin, cfg.rotary_pct)
+        k = L.apply_rope(k, cos, sin, cfg.rotary_pct)
+    scale = cfg.head_dim ** -0.5
+    from repro.kernels import ops
+    new_cache = None
+    if cache is not None:
+        if L._use_seqsharded_decode(ctx, cfg, x, cache):
+            out, new_cache = L._decode_attention_seqsharded(
+                ctx, cfg, q, cache, k, v, cache_index, scale=scale)
+            y = jnp.einsum("bse,ed->bsd",
+                           out.reshape(B, out.shape[1],
+                                       cfg.n_heads * cfg.head_dim),
+                           p["wo"].astype(c))
+            return ctx.cst(y, "act_batch", "act_seq", "act_embed"), new_cache
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        ck = ctx.cst(ck, "act_batch", "act_kv_seq", None, None)
+        cv = ctx.cst(cv, "act_batch", "act_kv_seq", None, None)
+        new_cache = {"k": ck, "v": cv}
+        kv_len = jnp.full((x.shape[0],), cache_index + x.shape[1], jnp.int32)
+        out = ops.decode_attention(q, ck.astype(c), cv.astype(c), kv_len,
+                                   scale=scale, mode=ctx.run.kernel_mode,
+                                   block_kv=ctx.run.attn_block_kv)
+    else:
+        out = ops.attention(q, k, v, causal=cfg.causal, scale=scale,
+                            mode=ctx.run.kernel_mode,
+                            block_q=ctx.run.attn_block_q,
+                            block_kv=ctx.run.attn_block_kv,
+                            naive_below=ctx.run.naive_attn_below)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, out.shape[1], H * hd),
+                   p["wo"].astype(c))
+    return ctx.cst(y, "act_batch", "act_seq", "act_embed"), new_cache
+
+
+def _zamba_forward(ctx, cfg, params, h, cos, sin, *, cache=None,
+                   cache_index=None):
+    n_super, per, trailing = zamba_structure(cfg)
+    emb0 = h
+    aux = jnp.zeros((), jnp.float32)
+    slice_stack = lambda tree, s, e: jax.tree.map(lambda a: a[s:e], tree)
+    st_all = cache["mamba"] if cache is not None else None
+    kv_shared = cache["kv_shared"] if cache is not None else None
+    new_st, new_kv = [], []
+    for i in range(n_super):
+        seg = slice_stack(params["layers"], i * per, (i + 1) * per)
+        st = slice_stack(st_all, i * per, (i + 1) * per) if st_all is not None else None
+        h, ns = _mamba_segment(ctx, cfg, seg, h, st)
+        if ns is not None:
+            new_st.append(ns)
+        kv_i = (jax.tree.map(lambda a: a[i], kv_shared)
+                if kv_shared is not None else None)
+        h, nkv = _shared_block(ctx, cfg, params["shared"], i, h, emb0,
+                               cos, sin, cache=kv_i, cache_index=cache_index)
+        if nkv is not None:
+            new_kv.append(nkv)
+    if trailing:
+        seg = slice_stack(params["layers"], n_super * per, cfg.n_layers)
+        st = (slice_stack(st_all, n_super * per, cfg.n_layers)
+              if st_all is not None else None)
+        h, ns = _mamba_segment(ctx, cfg, seg, h, st)
+        if ns is not None:
+            new_st.append(ns)
+    new_cache = None
+    if cache is not None:
+        cat = lambda *ts: jnp.concatenate(ts, axis=0)
+        new_cache = {
+            "mamba": jax.tree.map(cat, *new_st) if len(new_st) > 1 else new_st[0],
+            "kv_shared": jax.tree.map(lambda *ts: jnp.stack(ts, 0), *new_kv),
+        }
+    return h, aux, new_cache
+
+
+# ===========================================================================
+# logits / caches
+# ===========================================================================
+
+def unembed_matrix(cfg: ModelConfig, params, dtype):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T.astype(dtype)
+    return params["unembed"]["w"].astype(dtype)
+
+
+def logits_for(ctx: L.Ctx, cfg: ModelConfig, params, h):
+    """Full logits (decode path; small S).  Pad-vocab columns masked."""
+    w = unembed_matrix(cfg, params, ctx.cdtype)
+    logits = jnp.einsum("bsd,dv->bsv", h, w).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+    return ctx.cst(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def init_cache(ctx: L.Ctx, cfg: ModelConfig, batch: int, max_seq: int,
+               abstract: bool = False):
+    """Decode-state pytree per family (concrete zeros or ShapeDtypeStructs)."""
+    c = ctx.cdtype
+    kv = L.abstract_kv_cache if abstract else L.empty_kv_cache
+    ms = L.abstract_mamba_state if abstract else L.empty_mamba_state
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.layer_pattern == "local_global":
+            half = cfg.n_layers // 2
+            return {"kv_local": kv(cfg, batch, max_seq, c, layers=half),
+                    "kv_global": kv(cfg, batch, max_seq, c, layers=half)}
+        return {"kv": kv(cfg, batch, max_seq, c, layers=cfg.n_layers)}
+    if cfg.family == "ssm":
+        return {"mamba": ms(cfg, batch, c, layers=cfg.n_layers)}
+    if cfg.family == "hybrid":
+        n_super, _, _ = zamba_structure(cfg)
+        return {"mamba": ms(cfg, batch, c, layers=cfg.n_layers),
+                "kv_shared": kv(cfg, batch, max_seq, c, layers=n_super)}
+    raise ValueError(f"{cfg.family} has no decode cache (encoder-only)")
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.layer_pattern == "local_global":
+            return {"kv_local": L.KV_CACHE_AXES, "kv_global": L.KV_CACHE_AXES}
+        return {"kv": L.KV_CACHE_AXES}
+    if cfg.family == "ssm":
+        return {"mamba": L.MAMBA_STATE_AXES}
+    if cfg.family == "hybrid":
+        return {"mamba": L.MAMBA_STATE_AXES, "kv_shared": L.KV_CACHE_AXES}
+    raise ValueError(cfg.family)

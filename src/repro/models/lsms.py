@@ -1,0 +1,184 @@
+"""LSMS-analogue workload: the paper's application, as a JAX program.
+
+LSMS (Locally Self-consistent Multiple Scattering) computes Green's
+functions via the KKR method: for every atom, build the multiple-scattering
+matrix A = I - t*G0 over its local interaction zone (LIZ), then solve
+A tau = t (LU factorize + triangular solve).  The SCF loop alternates this
+accelerator-heavy solve with host-side density mixing (the paper's
+'gpu compute idle' phase).
+
+Two layers:
+
+  * ``scf_step`` and friends — a real, runnable miniature of the math
+    (complex64 block assembly, zgemm, LU solve) used by examples/lsms_scf.py
+    and the task-segmentation tests;
+  * ``paper_calibrated_tasks`` — the paper's Table-1 task mix re-scaled to
+    the modeled TPU chip: per-task (flops, bytes, calls) chosen so that at
+    the default power cap each task's runtime share and boundedness match
+    the paper's GH200 measurements (zgemm64 dominant & compute-bound,
+    buildKKRMatrix memory-bound, idle phases between SCF iterations).  These
+    drive the benchmark reproductions of paper Figs 1-3 / Tables 1-2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tasks import Task
+from repro.hw.tpu import ChipSpec, DEFAULT_CHIP
+
+
+# ===========================================================================
+# runnable miniature (real math)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class LsmsConfig:
+    n_atoms: int = 8
+    liz: int = 4          # atoms in the local interaction zone
+    nb: int = 16          # angular-momentum block size ((lmax+1)^2)
+    scf_iters: int = 2
+    e_points: int = 4     # energy-contour points
+
+
+def make_positions(cfg: LsmsConfig, key) -> jax.Array:
+    return jax.random.uniform(key, (cfg.n_atoms, 3), jnp.float32, 0.0, 10.0)
+
+
+def build_kkr_matrix(cfg: LsmsConfig, positions, t_diag, energy):
+    """Assemble A = I - t*G0 per atom (gather-heavy; the paper's
+    memory-bound buildKKRMatrix task).
+
+    G0 blocks between LIZ members decay with distance and oscillate with
+    sqrt(energy) — structurally faithful free-space structure constants
+    (not the true Gaunt-coefficient expansion)."""
+    n, liz, nb = cfg.n_atoms, cfg.liz, cfg.nb
+    d2 = jnp.sum((positions[:, None] - positions[None, :]) ** 2, -1)
+    neigh = jnp.argsort(d2, axis=1)[:, :liz]                  # (n, liz)
+    pos_l = positions[neigh]                                  # (n, liz, 3)
+    rij = jnp.linalg.norm(pos_l[:, :, None] - pos_l[:, None, :] + 1e-3,
+                          axis=-1)                            # (n, liz, liz)
+    kappa = jnp.sqrt(jnp.abs(energy)) + 0.1
+    phase = jnp.exp(1j * kappa * rij) / rij.astype(jnp.complex64)
+    lm = (jnp.arange(nb)[:, None] - jnp.arange(nb)[None, :]).astype(
+        jnp.float32)
+    ang = jnp.exp(-0.1 * jnp.abs(lm)).astype(jnp.complex64)   # (nb, nb)
+    g0 = phase[..., None, None] * ang                         # (n,liz,liz,nb,nb)
+    eye_liz = jnp.eye(liz, dtype=jnp.complex64)
+    g0 = g0 * (1.0 - eye_liz)[None, :, :, None, None]         # no self-blocks
+    # t * G0 (zgemm task): t is block-diagonal per atom
+    t_blocks = t_diag[neigh]                                  # (n,liz,nb,nb)
+    tg = jnp.einsum("napq,nasqr->naspr", t_blocks, g0)        # (n,liz,liz,nb,nb)
+    m = liz * nb
+    A = (jnp.eye(m, dtype=jnp.complex64)[None]
+         - tg.transpose(0, 1, 3, 2, 4).reshape(n, m, m))
+    return A, t_blocks
+
+
+def solve_tau(A, t_blocks):
+    """A tau = t: LU factorize + solve (the getrf/trsm tasks)."""
+    n, m, _ = A.shape
+    nb = t_blocks.shape[-1]
+    rhs = jnp.zeros((n, m, nb), jnp.complex64)
+    rhs = rhs.at[:, :nb, :].set(t_blocks[:, 0])
+    lu, piv = jax.scipy.linalg.lu_factor(A)
+    tau = jax.scipy.linalg.lu_solve((lu, piv), rhs)
+    return tau[:, :nb, :]                                     # (n, nb, nb)
+
+
+def scf_step(cfg: LsmsConfig, positions, t_diag):
+    """One SCF iteration over the energy contour; returns new density."""
+    def per_energy(carry, e):
+        A, t_blocks = build_kkr_matrix(cfg, positions, t_diag, e)
+        tau = solve_tau(A, t_blocks)
+        dos = -jnp.imag(jnp.trace(tau, axis1=1, axis2=2)) / jnp.pi
+        return carry + dos, None
+
+    energies = jnp.linspace(0.5, 2.0, cfg.e_points)
+    density, _ = jax.lax.scan(per_energy,
+                              jnp.zeros((cfg.n_atoms,), jnp.float32),
+                              energies)
+    return density / cfg.e_points
+
+
+def host_mix(density, new_density, alpha=0.3):
+    """Host-side density mixing (the 'gpu compute idle' phase)."""
+    import numpy as np
+    d = np.asarray(density)
+    nd = np.asarray(new_density)
+    return jnp.asarray((1 - alpha) * d + alpha * nd)
+
+
+def run_scf(cfg: LsmsConfig, key):
+    positions = make_positions(cfg, key)
+    t_diag = (0.1j * jnp.eye(cfg.nb, dtype=jnp.complex64)
+              )[None].repeat(cfg.n_atoms, 0)
+    density = jnp.zeros((cfg.n_atoms,), jnp.float32)
+    for _ in range(cfg.scf_iters):
+        new_density = scf_step(cfg, positions, t_diag)
+        density = host_mix(density, new_density)
+        scale = (1.0 + 0.05 * jnp.tanh(density)).astype(jnp.complex64)
+        t_diag = t_diag * scale[:, None, None]
+    return density
+
+
+# ===========================================================================
+# paper-calibrated task mix (drives the benchmark reproductions)
+# ===========================================================================
+
+def paper_calibrated_tasks(chip: ChipSpec = DEFAULT_CHIP) -> list[Task]:
+    """The paper's Table-1 task mix, re-scaled to the modeled chip.
+
+    For each task we choose (flops, hbm_bytes) so that at the DEFAULT cap the
+    runtime matches the paper's measured seconds and the roofline
+    boundedness matches the paper's characterization.  Invocation counts are
+    the paper's.  The memory/compute TIME RATIO encodes how deep the clock
+    can drop before runtime suffers (the paper's compute-vs-memory capping
+    asymmetry):
+      zgemm64   strongly compute-bound (mem ratio 0.25) -> optimum near max
+      zgemm32   compute-bound, smaller tiles (0.55)
+      getrf     pivoting is access-limited (0.80)       -> mid-range optimum
+      trsm      memory-bound (compute ratio 0.70)
+      buildKKR  memory-bound (compute ratio 0.30)       -> low optimum
+      idle      host-only density mixing between SCF iterations -> floor
+    """
+    peak, bw = chip.peak_flops_bf16, chip.hbm_bandwidth
+
+    def compute_task(name, seconds, calls, mem_ratio):
+        return Task(name, flops=peak * seconds / calls,
+                    hbm_bytes=mem_ratio * bw * seconds / calls, calls=calls)
+
+    def memory_task(name, seconds, calls, comp_ratio):
+        return Task(name, flops=comp_ratio * peak * seconds / calls,
+                    hbm_bytes=bw * seconds / calls, calls=calls)
+
+    return [
+        compute_task("zgemm_ts64", 77.89, 21632, 0.25),
+        memory_task("buildKKRMatrix", 34.90, 128, 0.30),
+        memory_task("zgemm_ts32", 8.03, 94208, 0.90),
+        memory_task("getrf_pivot_1", 4.07, 16384, 0.80),
+        memory_task("getrf_pivot_2", 4.07, 30720, 0.85),
+        memory_task("trsm_left", 3.57, 150272, 0.70),
+        memory_task("getrf_pivot_3", 1.82, 8192, 0.85),
+        Task("gpu_compute_idle", flops=0.0, hbm_bytes=0.0, calls=601345,
+             host_seconds=8.83 / 601345),
+    ]
+
+
+def scf_phase_sequence(chip: ChipSpec = DEFAULT_CHIP) -> list[Task]:
+    """Fig-1-style phase sequence: two SCF iterations, idle gaps between."""
+    tasks = {t.name: t for t in paper_calibrated_tasks(chip)}
+
+    def half(name, frac=0.5):
+        t = tasks[name]
+        return dataclasses.replace(t, calls=max(int(t.calls * frac), 1))
+
+    iteration = [half("buildKKRMatrix"), half("zgemm_ts64"),
+                 half("zgemm_ts32"), half("getrf_pivot_1"),
+                 half("getrf_pivot_2"), half("getrf_pivot_3"),
+                 half("trsm_left")]
+    idle = half("gpu_compute_idle")
+    return iteration + [idle] + iteration + [idle]

@@ -1,0 +1,120 @@
+"""Optimizers, from scratch (no optax in this environment).
+
+AdamW keeps f32 moments per parameter (12 bytes/param of optimizer state);
+Adafactor keeps factored second moments (the memory-lean option for the
+largest assigned archs — a hillclimb lever for the dry-run memory term).
+Both are pure pytree transforms compatible with pjit sharding: state mirrors
+the parameter tree so parameter shardings apply verbatim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(self, grads, state, params, step):
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = self.b1 * m + (1 - self.b1) * gf
+            v_new = self.b2 * v + (1 - self.b2) * gf * gf
+            mh, vh = m_new / bc1, v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+                m_new, v_new
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second-moment optimizer (Shazeer & Stern 2018, simplified).
+
+    Matrices (>=2D) store row/col second-moment vectors instead of a full
+    moment tensor: O(n+m) state instead of O(nm)."""
+
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        def state_for(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(state_for, params)}
+
+    def update(self, grads, state, params, step):
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** -self.decay
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True)[..., None], self.eps))
+                u = gf / jnp.sqrt(jnp.maximum(denom * vc[..., None, :],
+                                              self.eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf / jnp.sqrt(jnp.maximum(v, self.eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        leaves, treedef = jax.tree.flatten(params)
+        gl = treedef.flatten_up_to(grads)
+        sl = treedef.flatten_up_to(state["f"])
+        outs = [upd(g, s, p) for g, s, p in zip(gl, sl, leaves)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_f = treedef.unflatten([o[1] for o in outs])
+        return new_params, {"f": new_f}

@@ -1,0 +1,22 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor_frac: float = 0.1):
+    """Linear warmup then cosine decay to floor_frac * peak."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        progress = jnp.clip((step - warmup_steps)
+                            / jnp.maximum(total_steps - warmup_steps, 1),
+                            0.0, 1.0)
+        floor = floor_frac * peak_lr
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr

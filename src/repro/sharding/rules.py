@@ -1,0 +1,171 @@
+"""Logical-axis -> mesh-axis rule system (MaxText/flax-partitioning style).
+
+Every parameter / activation in the model zoo is annotated with a tuple of
+LOGICAL axis names ("embed", "heads", "mlp", ...).  A ``LogicalRules`` maps
+those names onto PHYSICAL mesh axes ("pod", "data", "model").  Swapping rule
+sets is the main sharding hillclimb lever (e.g. FSDP-style weight sharding vs
+pure tensor parallelism) and per-arch overrides live in the arch config.
+
+Rules are divisibility-aware: a rule only fires if the dimension is divisible
+by the mesh-axis size (GSPMD would pad otherwise; padding silently wastes
+compute, so we prefer an explicit fallback to replication and record it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# mesh axis name(s) each logical axis maps to; entries may be a single mesh
+# axis, a tuple of mesh axes (sharded over both), or None (replicated).
+Rule = str | tuple[str, ...] | None
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalRules:
+    rules: Mapping[str, Rule]
+    name: str = "custom"
+    # logical axes sharded even when not divisible by the mesh axis.  NOTE:
+    # pjit rejects uneven shardings on INPUTS, so this only applies to
+    # intermediates; parameters use explicit padding (vocab_padded) instead.
+    allow_uneven: frozenset[str] = frozenset()
+
+    def get(self, logical: str) -> Rule:
+        return self.rules.get(logical)
+
+    def override(self, name: str = "override", **changes: Rule) -> "LogicalRules":
+        merged = dict(self.rules)
+        merged.update(changes)
+        return LogicalRules(rules=merged, name=name,
+                            allow_uneven=self.allow_uneven)
+
+
+# Default: DP over (pod, data); TP over model for vocab/heads/mlp/experts.
+DEFAULT_RULES = LogicalRules(name="default", rules={
+    # ---- parameter axes ----
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv_flat": "model",     # flattened (heads*head_dim) projection columns
+    "kv_flat": "model",      # flattened (kv_heads*head_dim) columns
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "ssm_inner": "model",    # mamba d_inner / conv channels / in_proj columns
+    "ssm_heads": "model",
+    "state": None,           # SSM state dim
+    "conv": None,
+    "layers": None,          # scan-stacked leading axis: never sharded
+    "frontend": None,
+    "lora": None,
+    # ---- activation axes ----
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_kv_seq": "model",   # decode-time KV-cache sequence dim
+    "act_embed": None,
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_expert": "model",
+    "act_ssm": "model",
+})
+
+# FSDP-style: additionally shard the big weight matrices' embed dim over the
+# data axis (ZeRO-3-like; XLA turns the DP all-reduce into reduce-scatter +
+# all-gather).  Used by large archs and as a sharding hillclimb lever.
+FSDP_RULES = DEFAULT_RULES.override(name="fsdp", embed=("pod", "data"))
+
+# Sequence-parallel attention: for archs whose head count does not divide the
+# model axis (gemma2 8H, minitron/llama3.2 24H on a 16-way axis) activations
+# shard over seq instead of heads; K/V are all-gathered (cheap under GQA).
+SEQPAR_RULES = DEFAULT_RULES.override(
+    name="seqparallel", act_heads=None, act_kv_heads=None, act_seq="model")
+
+RULE_SETS = {"default": DEFAULT_RULES, "fsdp": FSDP_RULES,
+             "seqparallel": SEQPAR_RULES,
+             "fsdp_seqparallel": FSDP_RULES.override(
+                 name="fsdp_seqparallel", act_heads=None, act_kv_heads=None,
+                 act_seq="model")}
+
+
+def _axis_size(mesh: Mesh, rule: Rule) -> int:
+    if rule is None:
+        return 1
+    if isinstance(rule, str):
+        return mesh.shape.get(rule, 1)
+    size = 1
+    for r in rule:
+        size *= mesh.shape.get(r, 1)
+    return size
+
+
+def _present(mesh: Mesh, rule: Rule) -> Rule:
+    """Drop mesh axes the current mesh does not have (e.g. 'pod' on the
+    single-pod mesh), preserving single-axis vs tuple structure."""
+    if rule is None:
+        return None
+    if isinstance(rule, str):
+        return rule if rule in mesh.shape else None
+    kept = tuple(r for r in rule if r in mesh.shape)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def resolve_spec(rules: LogicalRules, mesh: Mesh,
+                 logical_axes: Sequence[str | None],
+                 dims: Sequence[int] | None = None) -> P:
+    """Resolve logical axes to a PartitionSpec, checking divisibility."""
+    parts: list[Rule] = []
+    used: set[str] = set()
+    for i, ax in enumerate(logical_axes):
+        rule = _present(mesh, rules.get(ax)) if ax is not None else None
+        if rule is not None and dims is not None and \
+                ax not in rules.allow_uneven:
+            if dims[i] % _axis_size(mesh, rule) != 0:
+                rule = None  # avoid GSPMD padding: replicate instead
+        # a mesh axis may appear at most once in a PartitionSpec
+        flat = (rule,) if isinstance(rule, str) else (rule or ())
+        if any(r in used for r in flat):
+            rule = None
+        else:
+            used.update(flat)
+        parts.append(rule)
+    while parts and parts[-1] is None:
+        parts.pop()  # trailing Nones are implicit
+    return P(*parts)
+
+
+def named_sharding(rules: LogicalRules, mesh: Mesh,
+                   logical_axes: Sequence[str | None],
+                   dims: Sequence[int] | None = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(rules, mesh, logical_axes, dims))
+
+
+def tree_shardings(rules: LogicalRules, mesh: Mesh, axes_tree,
+                   shape_tree=None):
+    """Map a pytree of logical-axis tuples (+ optional matching shapes) to a
+    pytree of NamedShardings."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda axes: named_sharding(rules, mesh, axes),
+            axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(
+        lambda axes, arr: named_sharding(rules, mesh, axes, tuple(arr.shape)),
+        axes_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def with_constraint(x, rules: LogicalRules, mesh: Mesh | None,
+                    *logical_axes: str | None):
+    """Activation sharding constraint by logical axes.  With no mesh (pure
+    single-device smoke tests) this is the identity."""
+    if mesh is None:
+        return x
+    spec = resolve_spec(rules, mesh, logical_axes, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,66 @@
+"""Sequence-chunked cross-entropy: logits are never materialized at
+(B, S, vocab).
+
+For vocab=256k archs a full logits tensor at train_4k would be
+256*4096*256000*4B = 1 PB-scale nonsense; instead we scan over sequence
+chunks, fusing projection + logsumexp + gather per chunk.  The vocab dim is
+sharded over the model axis ("act_vocab"), so the per-chunk reductions lower
+to sharded reduce ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.layers import Ctx
+
+
+def chunked_cross_entropy(ctx: Ctx, cfg: ModelConfig, params, h, labels,
+                          mask=None, z_loss: float = 0.0):
+    """h: (B, S, D); labels: (B, S) int32, -1 = padding.
+    Returns (mean_ce, metrics_dict)."""
+    B, S, D = h.shape
+    W = lm.unembed_matrix(cfg, params, ctx.cdtype)
+    chunk = min(ctx.run.logits_chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+
+    if mask is None:
+        mask = labels >= 0
+    maskf = mask.astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+
+    hc = jnp.moveaxis(h.reshape(B, nc, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels_safe.reshape(B, nc, chunk), 1, 0)
+    mc = jnp.moveaxis(maskf.reshape(B, nc, chunk), 1, 0)
+
+    pad_mask = (jnp.arange(cfg.vocab_padded) < cfg.vocab
+                if cfg.vocab_padded != cfg.vocab else None)
+
+    def body(carry, xs):
+        tot, zt, cnt = carry
+        hh, ll, mm = xs
+        logits = jnp.einsum("bcd,dv->bcv", hh, W).astype(jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+        logits = ctx.cst(logits, "act_batch", None, "act_vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum((lse - gold) * mm)
+        zt = zt + jnp.sum(lse * lse * mm)
+        cnt = cnt + jnp.sum(mm)
+        return (tot, zt, cnt), None
+
+    (tot, zt, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), (hc, lc, mc))
+    cnt = jnp.maximum(cnt, 1.0)
+    ce = tot / cnt
+    loss = ce + z_loss * zt / cnt
+    return loss, {"ce": ce, "tokens": cnt}

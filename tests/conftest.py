@@ -1,0 +1,15 @@
+import os
+import sys
+
+# tests see the real single CPU device (the dry-run forces 512 in its OWN
+# process); a couple of sharding tests spawn subprocesses with their own
+# XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

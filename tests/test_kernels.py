@@ -1,0 +1,179 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+executed in interpret mode on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention, flash_decode
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.ssd import ssd
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, Sq, H, K, D, dtype, Sk=None):
+    Sk = Sk if Sk is not None else Sq
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, K, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, K, D), jnp.float32)
+    return q.astype(dtype), k.astype(dtype), v.astype(dtype)
+
+
+ATTN_SHAPES = [
+    # B, S, H, K, D, block_q, block_kv
+    (1, 128, 4, 4, 64, 64, 64),      # MHA
+    (2, 256, 8, 2, 32, 128, 64),     # GQA 4:1
+    (1, 192, 6, 3, 64, 64, 128),     # uneven block/seq (padding path)
+    (2, 64, 4, 1, 128, 32, 32),      # MQA
+]
+
+
+@pytest.mark.parametrize("B,S,H,K,D,bq,bkv", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, S, H, K, D, bq, bkv, dtype):
+    q, k, v = _qkv(B, S, H, K, D, dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_kv=bkv,
+                          interpret=True)
+    exp = ref.attention_naive(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               exp.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_flash_attention_local_window(window):
+    q, k, v = _qkv(1, 256, 4, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, local_window=window,
+                          block_q=64, block_kv=64, interpret=True)
+    exp = ref.attention_naive(q, k, v, causal=True, local_window=window)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_softcap_and_scale():
+    q, k, v = _qkv(2, 128, 4, 4, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, softcap=30.0, scale=0.0625,
+                          block_q=64, block_kv=64, interpret=True)
+    exp = ref.attention_naive(q, k, v, causal=True, softcap=30.0,
+                              scale=0.0625)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = _qkv(1, 160, 4, 4, 32, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_kv=64,
+                          interpret=True)
+    exp = ref.attention_naive(q, k, v, causal=False)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+def test_blockwise_ref_matches_naive_long():
+    q, k, v = _qkv(1, 512, 2, 2, 32, jnp.float32)
+    blk = ref.attention_blockwise(q, k, v, causal=True, block_kv=128)
+    naive = ref.attention_naive(q, k, v, causal=True)
+    np.testing.assert_allclose(blk, naive, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("lens", [[64, 128], [1, 77]])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(lens, dtype):
+    B, S, H, K, D = len(lens), 128, 8, 2, 64
+    q, k, v = _qkv(B, 1, H, K, D, dtype, Sk=S)
+    kv_len = jnp.array(lens, jnp.int32)
+    out = flash_decode(q, k, v, kv_len, block_kv=32, interpret=True)
+    exp = ref.decode_attention_ref(q, k, v, kv_len)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               exp.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+SSD_SHAPES = [
+    # B, S, H, P, G, N, chunk
+    (1, 64, 2, 16, 1, 16, 16),
+    (2, 128, 4, 32, 2, 16, 32),
+    (1, 96, 4, 16, 1, 32, 32),    # S not a multiple of 2*chunk
+]
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", SSD_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_vs_naive(B, S, H, P, G, N, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)).astype(dtype)
+    Cm = jax.random.normal(ks[4], (B, S, G, N)).astype(dtype)
+    D = jnp.ones((H,))
+    y, st = ssd(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    y_ref, st_ref = ref.ssd_naive(x, dt, A, Bm, Cm, D)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(y.astype(jnp.float32),
+                               y_ref.astype(jnp.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(st, st_ref, atol=tol, rtol=tol)
+
+
+def test_ssd_with_initial_state():
+    B, S, H, P, G, N = 1, 64, 2, 16, 1, 16
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    h0 = jax.random.normal(ks[5], (B, H, P, N))
+    y, st = ssd(x, dt, A, Bm, Cm, None, h0=h0, chunk=16, interpret=True)
+    y_ref, st_ref = ref.ssd_naive(x, dt, A, Bm, Cm, None, h0=h0)
+    np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(st, st_ref, atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_chunked_ref_split_invariance():
+    """Chunked == naive for any chunk size (state-passing correctness)."""
+    B, S, H, P, G, N = 1, 96, 2, 8, 1, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y_ref, _ = ref.ssd_naive(x, dt, A, Bm, Cm)
+    for chunk in (8, 16, 32, 48, 96):
+        y, _ = ref.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+        np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_decode_step_matches_naive_tail():
+    B, S, H, P, G, N = 2, 33, 2, 8, 1, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y_all, _ = ref.ssd_naive(x, dt, A, Bm, Cm)
+    _, st = ref.ssd_naive(x[:, :-1], dt[:, :-1], A, Bm[:, :-1], Cm[:, :-1])
+    y_t, _ = ref.ssd_decode_step(st, x[:, -1], dt[:, -1], A, Bm[:, -1],
+                                 Cm[:, -1])
+    np.testing.assert_allclose(y_t, y_all[:, -1], atol=1e-4, rtol=1e-4)
+
+
+GMM_SHAPES = [(4, 64, 32, 48, 32, 16, 16), (2, 100, 72, 130, 32, 32, 64),
+              (8, 16, 128, 16, 16, 64, 16)]
+
+
+@pytest.mark.parametrize("G,M,K,N,bm,bk,bn", GMM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul(G, M, K, N, bm, bk, bn, dtype):
+    ks = jax.random.split(KEY, 2)
+    lhs = jax.random.normal(ks[0], (G, M, K)).astype(dtype)
+    rhs = jax.random.normal(ks[1], (G, K, N)).astype(dtype)
+    out = grouped_matmul(lhs, rhs, block_m=bm, block_k=bk, block_n=bn,
+                         interpret=True)
+    exp = ref.grouped_matmul_ref(lhs, rhs)
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               exp.astype(jnp.float32), atol=tol, rtol=tol)

@@ -1,0 +1,110 @@
+"""Unit + property tests for the paper's decision metrics."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TaskMeasurement, TaskTable, aggregate_table2,
+                        ed_argmin_is_pareto, ed_optimal_cap,
+                        euclidean_distance, gps_up, sed_optimal_cap,
+                        speedup_energy_delay, table2)
+
+CAPS = [90.0, 120.0, 150.0, 180.0, 210.0, 240.0, 270.0, 300.0, 330.0]
+
+
+def _table(rows_by_task):
+    rows = []
+    for task, pairs in rows_by_task.items():
+        for cap, (t, e) in zip(CAPS, pairs):
+            rows.append(TaskMeasurement(task=task, cap=cap, runtime=t,
+                                        energy=e))
+    return TaskTable(rows)
+
+
+def test_sed_baseline_is_one():
+    tbl = _table({"a": [(1.0 + i, 10.0 - i) for i in range(9)]})
+    sed = speedup_energy_delay(tbl, "a")
+    assert sed[330.0] == pytest.approx(1.0)
+
+
+def test_sed_prefers_min_product():
+    # runtime*energy smallest at cap 210 (index 4)
+    prods = [10, 9, 8, 7, 2, 8, 9, 10, 11]
+    tbl = _table({"a": [(p, 1.0) for p in prods]})
+    assert sed_optimal_cap(tbl, "a") == 210.0
+
+
+def test_ed_distance_zero_at_double_min():
+    # one cap is simultaneously fastest and most efficient
+    tbl = _table({"a": [(5, 5), (4, 4), (3, 3), (1, 1), (3, 3),
+                        (4, 4), (5, 5), (6, 6), (7, 7)]})
+    ed = euclidean_distance(tbl, "a")
+    assert ed[180.0] == pytest.approx(0.0)
+    assert ed_optimal_cap(tbl, "a") == 180.0
+
+
+def test_gps_up_categories():
+    tbl = _table({"a": [(2.0, 0.5)] * 8 + [(1.0, 1.0)]})
+    g = gps_up(tbl, "a")
+    assert g[90.0].category == "green-but-slower"
+    assert g[330.0].category == "win-win"  # baseline ties count as win-win
+
+
+measure_lists = st.lists(
+    st.tuples(st.floats(0.1, 1e4, allow_nan=False),
+              st.floats(0.1, 1e6, allow_nan=False)),
+    min_size=9, max_size=9)
+
+
+@given(measure_lists)
+@settings(max_examples=200, deadline=None)
+def test_ed_argmin_is_pareto_property(pairs):
+    """Global Criterion guarantee: the ED argmin is never strictly
+    dominated in (runtime, energy)."""
+    tbl = _table({"a": pairs})
+    assert ed_argmin_is_pareto(tbl, "a")
+
+
+@given(measure_lists, st.floats(0.01, 100.0), st.floats(0.01, 100.0))
+@settings(max_examples=100, deadline=None)
+def test_ed_scale_invariance(pairs, st_scale, e_scale):
+    """min-max normalization makes ED invariant to unit changes."""
+    tbl1 = _table({"a": pairs})
+    tbl2 = _table({"a": [(t * st_scale, e * e_scale) for t, e in pairs]})
+    assert ed_optimal_cap(tbl1, "a") == ed_optimal_cap(tbl2, "a")
+
+
+@given(measure_lists)
+@settings(max_examples=100, deadline=None)
+def test_sed_scale_invariance(pairs):
+    tbl1 = _table({"a": pairs})
+    tbl2 = _table({"a": [(t * 3.0, e * 7.0) for t, e in pairs]})
+    assert sed_optimal_cap(tbl1, "a") == sed_optimal_cap(tbl2, "a")
+
+
+@given(measure_lists)
+@settings(max_examples=100, deadline=None)
+def test_sed_optimal_cap_maximizes(pairs):
+    tbl = _table({"a": pairs})
+    cap = sed_optimal_cap(tbl, "a")
+    sed = speedup_energy_delay(tbl, "a")
+    assert sed[cap] == pytest.approx(max(sed.values()))
+
+
+def test_table2_aggregation_matches_rows():
+    tbl = _table({
+        "x": [(10 - i, 100 + 5 * i) for i in range(9)],
+        "y": [(5 + i, 200 - 10 * i) for i in range(9)],
+    })
+    rows = table2(tbl)
+    agg = aggregate_table2(rows)
+    assert agg["sed_energy_savings_pct_sum"] == pytest.approx(
+        sum(r.sed_energy_reduction_pct for r in rows))
+
+
+def test_tasktable_json_roundtrip():
+    tbl = _table({"a": [(1.0 + i, 2.0 * i + 1) for i in range(9)]})
+    tbl2 = TaskTable.from_json(tbl.to_json())
+    assert tbl2.at("a", 150.0).energy == tbl.at("a", 150.0).energy
+    assert tbl2.tasks() == tbl.tasks()

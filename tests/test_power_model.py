@@ -1,0 +1,127 @@
+"""DVFS + power-steering model tests (the measurement substrate)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import NoiseModel, Task, measure_sweep, simulate_task
+from repro.hw import (DEFAULT_CHIP, DEFAULT_SUPERCHIP, WorkProfile,
+                      chip_power, clock_for_cap, idle_power)
+
+CHIP = DEFAULT_CHIP
+SPEC = DEFAULT_SUPERCHIP
+
+
+def _compute_task(seconds=1.0, mem_ratio=0.2):
+    return Task("c", flops=CHIP.peak_flops_bf16 * seconds,
+                hbm_bytes=mem_ratio * CHIP.hbm_bandwidth * seconds)
+
+
+def _memory_task(seconds=1.0, comp_ratio=0.2):
+    return Task("m", flops=comp_ratio * CHIP.peak_flops_bf16 * seconds,
+                hbm_bytes=CHIP.hbm_bandwidth * seconds)
+
+
+def test_power_monotone_in_clock():
+    w = _compute_task().work_profile(CHIP)
+    powers = [chip_power(CHIP, w, f) for f in (0.4, 0.6, 0.8, 1.0)]
+    assert powers == sorted(powers)
+
+
+def test_clock_for_cap_respects_cap():
+    w = _compute_task().work_profile(CHIP)
+    for cap in (100.0, 150.0, 200.0, 240.0):
+        f = clock_for_cap(CHIP, w, cap)
+        if f > CHIP.f_min:  # attainable region
+            assert chip_power(CHIP, w, f) <= cap + 1e-6
+
+
+def test_compute_bound_runtime_scales_inverse_clock():
+    t = _compute_task(mem_ratio=0.1)
+    hi = simulate_task(t, SPEC.p_max)
+    lo = simulate_task(t, 150.0)
+    assert lo.clock_fraction < 1.0
+    assert lo.runtime == pytest.approx(
+        hi.runtime * hi.clock_fraction / lo.clock_fraction, rel=1e-3)
+
+
+def test_memory_bound_runtime_flat_above_knee():
+    t = _memory_task(comp_ratio=0.2)
+    hi = simulate_task(t, SPEC.p_max)
+    mid = simulate_task(t, 170.0)
+    # as long as the clock stays above the memory knee, runtime is flat
+    if mid.clock_fraction >= CHIP.mem_f_knee / 0.999:
+        assert mid.runtime == pytest.approx(hi.runtime, rel=1e-3)
+    assert mid.energy < hi.energy  # but energy drops
+
+
+def test_firmware_floor_corner():
+    """Paper's 200 W corner: unattainable cap -> slowest AND hungry."""
+    t = _compute_task()
+    rows = {c: simulate_task(t, c) for c in SPEC.cap_sweep()}
+    floor = rows[min(rows)]
+    assert floor.clock_fraction == pytest.approx(CHIP.f_min)
+    assert floor.runtime == max(r.runtime for r in rows.values())
+
+
+def test_idle_power_grows_with_budget():
+    assert idle_power(CHIP, 250.0) > idle_power(CHIP, 100.0)
+    assert idle_power(CHIP, 40.0) >= CHIP.p_idle_floor - 1e-9
+
+
+def test_idle_task_energy_increases_with_cap():
+    """Paper: the gpu-compute-idle phase consumes MORE energy at higher
+    caps (parked clocks)."""
+    t = Task("idle", flops=0, hbm_bytes=0, host_seconds=1.0)
+    caps = sorted(SPEC.cap_sweep())[2:]  # above host-throttling region
+    energies = [simulate_task(t, c).energy for c in caps]
+    assert energies == sorted(energies)
+
+
+def test_steering_host_priority():
+    """Host draws first: at tight superchip caps the idle-phase host still
+    gets clock before the parked accelerator."""
+    t = Task("idle", flops=0, hbm_bytes=0, host_seconds=1.0)
+    tight = simulate_task(t, 120.0)
+    open_ = simulate_task(t, SPEC.p_max)
+    assert tight.runtime <= open_.runtime * 1.5
+    assert tight.avg_power < open_.avg_power
+
+
+@given(st.floats(0.05, 1.0), st.floats(0.0, 1.5), st.floats(0.0, 0.5))
+@settings(max_examples=60, deadline=None)
+def test_energy_runtime_positive(fsec, mem_ratio, coll_ratio):
+    t = Task("t", flops=CHIP.peak_flops_bf16 * fsec,
+             hbm_bytes=mem_ratio * CHIP.hbm_bandwidth * fsec,
+             coll_bytes=coll_ratio * CHIP.ici_bandwidth * fsec)
+    for cap in SPEC.cap_sweep():
+        m = simulate_task(t, cap)
+        assert m.runtime > 0 and m.energy > 0
+        assert CHIP.f_min - 1e-9 <= m.clock_fraction <= 1.0
+
+
+@given(st.floats(0.1, 2.0), st.floats(0.0, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_runtime_monotone_nonincreasing_in_cap(fsec, mem_ratio):
+    """More power never hurts runtime."""
+    t = Task("t", flops=CHIP.peak_flops_bf16 * fsec,
+             hbm_bytes=mem_ratio * CHIP.hbm_bandwidth * fsec)
+    rts = [simulate_task(t, c).runtime for c in sorted(SPEC.cap_sweep())]
+    for a, b in zip(rts, rts[1:]):
+        assert b <= a + 1e-9
+
+
+def test_noise_model_deterministic_mean():
+    t = _compute_task()
+    n = NoiseModel(sigma_runtime=0.05, sigma_power=0.05, seed=7)
+    a = simulate_task(t, 240.0, noise=n)
+    b = simulate_task(t, 240.0, noise=n)
+    assert a.runtime == b.runtime and a.energy == b.energy
+    clean = simulate_task(t, 240.0)
+    assert a.runtime == pytest.approx(clean.runtime, rel=0.2)
+
+
+def test_measure_sweep_covers_grid():
+    tasks = [_compute_task(), _memory_task()]
+    tbl = measure_sweep(tasks)
+    assert len(tbl.rows) == 2 * len(SPEC.cap_sweep())
+    assert set(tbl.tasks()) == {"c", "m"}

@@ -1,0 +1,296 @@
+"""Substrate tests: data pipeline, checkpointing, optimizer, fault-tolerance
+runtime, gradient compression, steering controller."""
+
+import os
+import signal
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import checkpoint
+from repro.core import (CapSchedule, PowerSteeringController, SteeringGoal,
+                        Task, measure_sweep)
+from repro.data.pipeline import DataConfig, Prefetcher, TokenSource
+from repro.hw.tpu import DEFAULT_CHIP, DEFAULT_SUPERCHIP
+from repro.optim import AdamW, Adafactor, clip_by_global_norm, warmup_cosine
+from repro.runtime.supervisor import (Preemption, StragglerWatchdog,
+                                      Supervisor, plan_mesh_shape)
+from repro.train.compression import int8_compress_decompress
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_resume():
+    cfg = DataConfig(vocab=100, global_batch=4, seq_len=16, seed=3)
+    src = TokenSource(cfg)
+    b5a = src.batch(5)
+    b5b = TokenSource(cfg).batch(5)       # fresh instance, same step
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+    assert not np.array_equal(src.batch(6)["tokens"], b5a["tokens"])
+
+
+def test_data_labels_are_next_tokens():
+    src = TokenSource(DataConfig(vocab=50, global_batch=2, seq_len=8))
+    b = src.batch(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 8)
+
+
+def test_data_host_sharding_disjoint():
+    kw = dict(vocab=100, global_batch=4, seq_len=8, num_hosts=2)
+    a = TokenSource(DataConfig(host_id=0, **kw)).batch(0)
+    b = TokenSource(DataConfig(host_id=1, **kw)).batch(0)
+    assert a["tokens"].shape[0] == 2
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_prefetcher_orders_steps():
+    src = TokenSource(DataConfig(vocab=10, global_batch=2, seq_len=4))
+    pf = Prefetcher(src, start_step=3)
+    steps = [next(pf)[0] for _ in range(3)]
+    pf.stop()
+    assert steps == [3, 4, 5]
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _state():
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    st = _state()
+    checkpoint.save(st, 7, str(tmp_path))
+    restored, step = checkpoint.restore(str(tmp_path), st)
+    assert step == 7
+    np.testing.assert_array_equal(restored["params"]["w"], st["params"]["w"])
+    assert restored["params"]["b"].dtype == np.dtype("bfloat16") or \
+        restored["params"]["b"].dtype.name == "bfloat16"
+
+
+def test_checkpoint_async_and_latest(tmp_path):
+    st = _state()
+    t = checkpoint.save(st, 1, str(tmp_path), blocking=False)
+    t.join()
+    checkpoint.save(st, 5, str(tmp_path))
+    assert checkpoint.available_steps(str(tmp_path)) == [1, 5]
+    _, step = checkpoint.restore(str(tmp_path), st)
+    assert step == 5
+
+
+def test_checkpoint_corruption_falls_back(tmp_path):
+    st = _state()
+    checkpoint.save(st, 1, str(tmp_path))
+    checkpoint.save(st, 2, str(tmp_path))
+    # corrupt the newest checkpoint
+    d = os.path.join(tmp_path, "step_00000002")
+    victim = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    with open(os.path.join(d, victim), "wb") as f:
+        f.write(b"garbage")
+    _, step = checkpoint.restore(str(tmp_path), st)
+    assert step == 1  # hash check skipped the corrupt one
+
+
+def test_checkpoint_partial_write_invisible(tmp_path):
+    """A tmp dir (simulated crash mid-save) is never restored."""
+    st = _state()
+    checkpoint.save(st, 1, str(tmp_path))
+    os.makedirs(os.path.join(tmp_path, ".tmp_step_00000009"))
+    _, step = checkpoint.restore(str(tmp_path), st)
+    assert step == 1
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_reference_numpy():
+    opt = AdamW(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.5, 0.5, -1.0])}
+    state = opt.init(p)
+    new_p, _ = opt.update(g, state, p, jnp.asarray(0))
+    # by-hand first AdamW step: mhat=g, vhat=g^2 -> p - lr*g/(|g|+eps)
+    expect = np.asarray(p["w"]) - 0.1 * np.sign(np.asarray(g["w"]))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expect, atol=1e-5)
+
+
+def test_adamw_weight_decay_pulls_to_zero():
+    opt = AdamW(lr=0.1, weight_decay=0.5)
+    p = {"w": jnp.asarray([10.0])}
+    g = {"w": jnp.asarray([0.0])}
+    new_p, _ = opt.update(g, opt.init(p), p, jnp.asarray(0))
+    assert float(new_p["w"][0]) < 10.0
+
+
+def test_adafactor_state_is_factored():
+    opt = Adafactor(lr=0.01)
+    p = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((64,))}
+    s = opt.init(p)
+    assert s["f"]["w"]["vr"].shape == (64,)
+    assert s["f"]["w"]["vc"].shape == (32,)
+    assert s["f"]["b"]["v"].shape == (64,)
+
+
+def test_adafactor_reduces_loss_on_quadratic():
+    opt = Adafactor(lr=0.05)
+    p = {"w": jnp.asarray([[3.0, -2.0], [1.0, 4.0]])}
+    s = opt.init(p)
+    for i in range(150):
+        g = {"w": 2 * p["w"]}
+        p, s = opt.update(g, s, p, jnp.asarray(i))
+    assert float(jnp.abs(p["w"]).max()) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}   # norm 5
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1.0, 10, 100)
+    assert float(lr(0)) == pytest.approx(0.0)
+    assert float(lr(10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr(100)) == pytest.approx(0.1, rel=1e-2)
+    assert float(lr(55)) < float(lr(20))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_supervisor_restarts_then_succeeds():
+    calls = []
+
+    def train_fn(restarts):
+        calls.append(restarts)
+        if len(calls) < 3:
+            raise RuntimeError("node died")
+        return "done"
+
+    sup = Supervisor(max_restarts=5, backoff_s=0.0)
+    assert sup.run(train_fn) == "done"
+    assert calls == [0, 1, 2]
+
+
+def test_supervisor_gives_up():
+    sup = Supervisor(max_restarts=1, backoff_s=0.0)
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        sup.run(lambda r: (_ for _ in ()).throw(RuntimeError("boom")))
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    wd = StragglerWatchdog(alpha=0.5, threshold=2.0)
+    flags = [wd.observe(i, 0.1) for i in range(5)]
+    assert not any(flags)
+    assert wd.observe(5, 0.5)    # 5x the EWMA
+    assert wd.events
+
+
+def test_plan_mesh_shape_elastic():
+    assert plan_mesh_shape(256) == ((16, 16), ("data", "model"))
+    assert plan_mesh_shape(512) == ((2, 16, 16), ("pod", "data", "model"))
+    assert plan_mesh_shape(448) == ((28, 16), ("data", "model"))
+    with pytest.raises(ValueError):
+        plan_mesh_shape(250)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_int8_compression_bounded_error():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 2, (64, 64))
+                          .astype(np.float32))}
+    dq = int8_compress_decompress(g)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+    assert float(jnp.max(jnp.abs(dq["w"] - g["w"]))) <= scale * 0.5 + 1e-6
+
+
+def test_int8_error_feedback_reduces_bias():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(0, 1, (128,)).astype(np.float32))}
+    err = {"w": jnp.zeros((128,))}
+    total_plain = jnp.zeros((128,))
+    total_ef = jnp.zeros((128,))
+    for _ in range(50):
+        total_plain += int8_compress_decompress(g)["w"]
+        dq, err = int8_compress_decompress(g, err)
+        total_ef += dq["w"]
+    target = 50 * g["w"]
+    assert (float(jnp.abs(total_ef - target).max())
+            <= float(jnp.abs(total_plain - target).max()) + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# steering controller
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lsms_table():
+    from repro.models.lsms import paper_calibrated_tasks
+    return measure_sweep(paper_calibrated_tasks())
+
+
+def test_controller_matches_metric_argmins(lsms_table):
+    from repro.core import ed_optimal_cap, sed_optimal_cap
+    ctrl = PowerSteeringController(DEFAULT_SUPERCHIP)
+    for metric, pick in (("sed", sed_optimal_cap), ("ed", ed_optimal_cap)):
+        for d in ctrl.decide(lsms_table, SteeringGoal(metric=metric)):
+            assert d.cap == pick(lsms_table, d.task)
+
+
+def test_goal_filter_runtime_constraint(lsms_table):
+    ctrl = PowerSteeringController(DEFAULT_SUPERCHIP)
+    goal = SteeringGoal(metric="ed", max_runtime_increase_pct=5.0)
+    for d in ctrl.decide(lsms_table, goal):
+        assert d.runtime_increase_pct <= 5.0 + 1e-9
+
+
+def test_goal_filter_unsatisfiable_stays_uncapped(lsms_table):
+    ctrl = PowerSteeringController(DEFAULT_SUPERCHIP)
+    goal = SteeringGoal(metric="ed", min_energy_saving_pct=99.0)
+    for d in ctrl.decide(lsms_table, goal):
+        assert d.cap == DEFAULT_SUPERCHIP.p_default
+
+
+def test_cap_schedule_transitions_coalesce():
+    sched = CapSchedule(caps={"a": 100.0, "b": 100.0, "c": 200.0},
+                        default_cap=330.0)
+    assert sched.transitions(["a", "b", "c", "a"]) == 2
+    dt, de = sched.overhead(["a", "b", "c"])
+    assert dt > 0 and de > 0
+
+
+def test_adafactor_abstract_state_matches_runtime():
+    """Dry-run abstract state (eval_shape) structure == concrete init."""
+    import jax
+    from repro.configs.base import ModelConfig, RunConfig
+    from repro.train.step import abstract_state, init_state, \
+        state_logical_axes
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                      vocab=128)
+    for optname in ("adamw", "adafactor"):
+        run = RunConfig(optimizer=optname)
+        abs_st = abstract_state(cfg, run)
+        real = init_state(cfg, run, jax.random.PRNGKey(0)).tree()
+        assert (jax.tree_util.tree_structure(abs_st)
+                == jax.tree_util.tree_structure(real))
+        axes = state_logical_axes(cfg, run)
+        assert (jax.tree_util.tree_structure(
+                    jax.tree.map(lambda a: 0, axes,
+                                 is_leaf=lambda x: isinstance(x, tuple)))
+                == jax.tree_util.tree_structure(real))
