@@ -20,11 +20,12 @@ import time
 import jax
 
 from repro.core import (aggregate_table2, euclidean_distance, generate_trace,
-                        measure_sweep, speedup_energy_delay, table2,
+                        speedup_energy_delay, table2,
                         weighted_application_impact)
 from repro.hw.tpu import DEFAULT_SUPERCHIP
 from repro.models.lsms import (LsmsConfig, paper_calibrated_tasks, run_scf,
                                scf_phase_sequence)
+from repro.power import PowerManager
 
 
 def main() -> None:
@@ -39,9 +40,10 @@ def main() -> None:
     print(f"[scf] {args.atoms} atoms, 2 iterations, "
           f"{time.perf_counter()-t0:.1f}s, density[0:4]={density[:4]}")
 
-    # -- 2. the power-cap sweep --------------------------------------------
+    # -- 2. the power-cap sweep (the manager's backend runs it) ------------
     tasks = paper_calibrated_tasks()
-    table = measure_sweep(tasks)
+    pm = PowerManager(tasks=tasks, metric="sed")
+    table = pm.table
 
     # -- 3. paper artifacts -------------------------------------------------
     print("\n== Table 1: per-task profile at default power (no capping) ==")
@@ -70,6 +72,12 @@ def main() -> None:
           f"energy @ +{w['sed_app_runtime_increase_pct']:.1f}% runtime; "
           f"ED -{w['ed_app_energy_reduction_pct']:.1f}% @ "
           f"+{w['ed_app_runtime_increase_pct']:.1f}%")
+
+    e = pm.account_step()
+    print(f"\nPowerManager session (SED schedule, dwell-filtered): "
+          f"{e['energy_j']:.0f}J per pass "
+          f"(-{e['energy_saving_pct']:.1f}% vs uncapped, "
+          f"{e['transitions']} cap writes)")
 
     if args.plots:
         _plots(table, tasks)

@@ -17,12 +17,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import reduced
 from repro.configs.registry import get_model_config, get_run_config
-from repro.core import (PowerSteeringController, SteeringGoal, measure_sweep)
 from repro.data.pipeline import DataConfig, TokenSource
 from repro.hw.tpu import DEFAULT_SUPERCHIP
 from repro.models.layers import Ctx
+from repro.power import PowerManager, available_metrics
 from repro.sharding import RULE_SETS
-from repro.train.phases import training_phase_tasks, PhaseEnergyLedger
+from repro.train.phases import training_phase_tasks
 from repro.train.step import init_state, make_train_step
 
 
@@ -30,7 +30,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--steps", type=int, default=10)
-    ap.add_argument("--power-metric", default="sed", choices=["sed", "ed"])
+    ap.add_argument("--power-metric", default="sed",
+                    choices=available_metrics())
     args = ap.parse_args()
 
     cfg = reduced(get_model_config(args.arch))
@@ -49,20 +50,18 @@ def main() -> None:
     # while the loop itself trains the reduced model on CPU.
     full = get_model_config(args.arch)
     tasks = training_phase_tasks(full, batch=256, seq=4096, chips=256)
-    table = measure_sweep(tasks)
-    sched = PowerSteeringController(DEFAULT_SUPERCHIP).schedule(
-        table, SteeringGoal(metric=args.power_metric))
     # 200 us dwell: one hwmon power-API write amortizes over phases >=200 us
-    ledger = PhaseEnergyLedger(sched, tasks, min_dwell_s=2e-4)
+    pm = PowerManager(tasks=tasks, metric=args.power_metric,
+                      spec=DEFAULT_SUPERCHIP, min_dwell_s=2e-4)
 
     print(f"arch={cfg.name} params per-phase caps: "
-          f"{ {k: round(v) for k, v in sched.caps.items()} }")
+          f"{ {k: round(v) for k, v in pm.schedule.caps.items()} }")
     for i in range(args.steps):
         t0 = time.perf_counter()
         batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
         st, metrics = step_fn(st, batch)
         dt = time.perf_counter() - t0
-        stats = ledger.account_step()
+        stats = pm.account_step()
         print(f"step {i:3d} loss={float(metrics['loss']):.4f} "
               f"wall={dt*1e3:6.1f}ms modeled: E={stats['energy_j']:.2f}J "
               f"(saved {stats['energy_saving_pct']:.1f}% vs uncapped)")

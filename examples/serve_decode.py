@@ -16,32 +16,12 @@ import jax
 
 from repro.configs.base import reduced
 from repro.configs.registry import get_model_config, get_run_config
-from repro.core import (PowerSteeringController, SteeringGoal, measure_sweep,
-                        simulate_task)
-from repro.core.tasks import Task
-from repro.hw.tpu import DEFAULT_CHIP, DEFAULT_SUPERCHIP
 from repro.models import lm
 from repro.models.layers import Ctx
 from repro.models.params import init_params
-from repro.serving.engine import Request, ServeEngine
+from repro.power import PowerManager
+from repro.serving.engine import Request, ServeEngine, serve_phase_tasks
 from repro.sharding import RULE_SETS
-
-
-def serve_phase_tasks(cfg, batch, prompt, new_tokens, chips=1):
-    """Prefill vs decode phases with analytic roofline terms."""
-    from repro.hw import flops as F
-    from repro.configs.base import ShapeConfig
-    n = F.active_param_count(cfg)
-    prefill_flops = 2.0 * n * batch * prompt \
-        + F._attention_flops_fwd(cfg, batch, prompt, prompt)
-    decode_flops = 2.0 * n * batch
-    cache = F._cache_bytes(cfg, batch, prompt)
-    return [
-        Task("prefill", flops=prefill_flops / chips,
-             hbm_bytes=(2.0 * n + cache) / chips),
-        Task("decode", flops=decode_flops / chips,
-             hbm_bytes=(2.0 * n + cache) / chips, calls=new_tokens),
-    ]
 
 
 def main() -> None:
@@ -56,7 +36,15 @@ def main() -> None:
     ctx = Ctx(run, RULE_SETS[run.rules_name], None)
     params = init_params(lm.model_decls(cfg), jax.random.PRNGKey(0))
 
-    engine = ServeEngine(cfg, run, ctx, params, batch_size=4, max_seq=64)
+    # per-phase capping for the FULL arch at production serving scale; the
+    # engine runs prefill/decode under these caps via pm.phase(...)
+    full = get_model_config(args.arch)
+    tasks = serve_phase_tasks(full, batch=128, prompt=32768,
+                              new_tokens=128, chips=256)
+    pm = PowerManager(tasks=tasks, metric="sed")
+
+    engine = ServeEngine(cfg, run, ctx, params, batch_size=4, max_seq=64,
+                         power=pm)
     reqs = [Request(uid=i, prompt=[(7 * i + j) % cfg.vocab
                                    for j in range(5 + i % 3)],
                     max_new_tokens=args.new)
@@ -66,19 +54,15 @@ def main() -> None:
         print(f"req {r.uid}: prompt={r.prompt} -> generated={r.generated}")
     assert all(len(r.generated) == args.new for r in done)
 
-    # per-phase capping for the FULL arch at production serving scale
-    full = get_model_config(args.arch)
-    tasks = serve_phase_tasks(full, batch=128, prompt=32768,
-                              new_tokens=128, chips=256)
-    table = measure_sweep(tasks)
-    ctrl = PowerSteeringController(DEFAULT_SUPERCHIP)
     for metric in ("sed", "ed"):
-        decisions = ctrl.decide(table, SteeringGoal(metric=metric))
+        decisions = PowerManager(pm.table, metric=metric).decide()
         summary = {d.task: (round(d.cap),
                             f"-{d.energy_reduction_pct:.1f}%E",
                             f"+{d.runtime_increase_pct:.1f}%t")
                    for d in decisions}
         print(f"[{metric}] {summary}")
+    print(f"[phases] {len(pm.history)} capped phase entries, "
+          f"{pm.transitions} cap writes")
     print("serving demo done.")
 
 

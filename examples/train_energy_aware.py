@@ -27,13 +27,13 @@ import jax.numpy as jnp
 
 from repro.ckpt import checkpoint
 from repro.configs.base import ModelConfig, RunConfig
-from repro.core import PowerSteeringController, SteeringGoal, measure_sweep
 from repro.data.pipeline import DataConfig, TokenSource
 from repro.hw.tpu import DEFAULT_SUPERCHIP
 from repro.models.layers import Ctx
+from repro.power import PowerManager, available_metrics
 from repro.runtime.supervisor import PreemptionGuard, StragglerWatchdog
 from repro.sharding import RULE_SETS
-from repro.train.phases import PhaseEnergyLedger, training_phase_tasks
+from repro.train.phases import training_phase_tasks
 from repro.train.step import init_state, make_train_step
 
 SIZES = {
@@ -62,7 +62,8 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--kill-at", type=int, default=-1,
                     help="send ourselves SIGTERM at this step (preemption demo)")
-    ap.add_argument("--power-metric", default="sed", choices=["sed", "ed"])
+    ap.add_argument("--power-metric", default="sed",
+                    choices=available_metrics())
     args = ap.parse_args()
 
     cfg = build_config(args.size)
@@ -86,11 +87,10 @@ def main() -> None:
 
     # -- the paper's technique wired into the loop --------------------------
     tasks = training_phase_tasks(cfg, batch=args.batch, seq=args.seq)
-    sched = PowerSteeringController(DEFAULT_SUPERCHIP).schedule(
-        measure_sweep(tasks), SteeringGoal(metric=args.power_metric))
-    ledger = PhaseEnergyLedger(sched, tasks, min_dwell_s=2e-4)
+    pm = PowerManager(tasks=tasks, metric=args.power_metric,
+                      spec=DEFAULT_SUPERCHIP, min_dwell_s=2e-4)
     print(f"[caps:{args.power_metric}] "
-          f"{ {k: round(v) for k, v in sched.caps.items()} }")
+          f"{ {k: round(v) for k, v in pm.schedule.caps.items()} }")
 
     watchdog = StragglerWatchdog()
     pending_ckpt = None
@@ -103,7 +103,7 @@ def main() -> None:
             st, metrics = step_fn(st, batch)
             dt = time.perf_counter() - t0
             slow = watchdog.observe(i, dt)
-            e = ledger.account_step()
+            e = pm.account_step()
             if i % 5 == 0 or slow:
                 print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
                       f"wall={dt*1e3:7.1f}ms E={e['energy_j']:.3f}J "

@@ -1,25 +1,37 @@
 """The paper's primary contribution: task-granular power-capping evaluation.
 
-  tasks.py        Task / TaskMeasurement / TaskTable (paper Table 1 analogue)
+  tasks.py        Task / TaskMeasurement / TaskTable (paper Table 1
+                  analogue; tolerance-indexed cap lookup + online
+                  ``observe`` refinement)
   power_model.py  (task, cap) -> (runtime, energy) via DVFS + power steering
-  metrics.py      speedup-energy-delay, Euclidean-distance, GPS-UP
-  steering.py     per-task cap selection + CapSchedule for the train loop
+  metrics.py      speedup-energy-delay, Euclidean-distance, GPS-UP (pure
+                  functions; the pluggable Metric registry lives in
+                  ``repro.power.metrics``)
+  steering.py     DEPRECATED shim — cap selection and the runtime session
+                  API moved to ``repro.power`` (PowerManager, CapBackend,
+                  PodPowerArbiter); the old names resolve lazily below so
+                  existing imports keep working
   trace.py        5 ms synthetic power trace (paper Fig. 1)
 """
 
-from repro.core.tasks import Task, TaskMeasurement, TaskTable
+from repro.core.tasks import (Task, TaskMeasurement, TaskTable,
+                              CAP_TOLERANCE_W, caps_equal)
 from repro.core.power_model import NoiseModel, measure_sweep, simulate_task
 from repro.core.metrics import (speedup_energy_delay, sed_optimal_cap,
                                 euclidean_distance, ed_optimal_cap,
                                 ed_argmin_is_pareto, gps_up, GpsUp,
                                 table2, aggregate_table2, Table2Row,
                                 weighted_application_impact)
-from repro.core.steering import (PowerSteeringController, SteeringGoal,
-                                 CapSchedule, CapDecision)
 from repro.core.trace import generate_trace, PowerTrace, TracePoint
 
+# Steering names are provided lazily (PEP 562): resolving them imports
+# repro.power, and doing that on first use instead of at package import
+# keeps repro.core <-> repro.power import-order independent.
+_STEERING_NAMES = ("PowerSteeringController", "SteeringGoal", "CapSchedule",
+                   "CapDecision")
+
 __all__ = [
-    "Task", "TaskMeasurement", "TaskTable",
+    "Task", "TaskMeasurement", "TaskTable", "CAP_TOLERANCE_W", "caps_equal",
     "NoiseModel", "measure_sweep", "simulate_task",
     "speedup_energy_delay", "sed_optimal_cap",
     "euclidean_distance", "ed_optimal_cap", "ed_argmin_is_pareto",
@@ -28,3 +40,10 @@ __all__ = [
     "PowerSteeringController", "SteeringGoal", "CapSchedule", "CapDecision",
     "generate_trace", "PowerTrace", "TracePoint",
 ]
+
+
+def __getattr__(name):
+    if name in _STEERING_NAMES:
+        from repro.core import steering
+        return getattr(steering, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,136 +1,42 @@
-"""Power-steering controller: per-task cap selection + runtime cap schedule.
+"""DEPRECATED shim — the steering stack moved to ``repro.power``.
 
-This is the 'future work' the paper lays the groundwork for (section 4/5):
-an adaptive, task-specific power-capping strategy driven by the evaluated
-metrics.  The controller
+Everything importable from here keeps working:
 
-  1. takes a TaskTable (modeled here; measured on real hardware),
-  2. picks a per-task cap with SED or ED (user-selectable), optionally under a
-     user-defined goal filter (max acceptable runtime increase, or min energy
-     saving — paper section 4 last paragraph),
-  3. emits a CapSchedule the training/serving loop applies phase-by-phase, and
-  4. accounts for cap-transition overhead (real power-API writes are not
-     free), so rapidly alternating tiny phases coalesce to one cap.
-
-On real hardware ``apply_cap`` is the host power-API write; in this container
-it is the 'simulate' backend that drives the energy ledger.
+  * ``SteeringGoal`` / ``CapSchedule`` / ``CapDecision`` are the same
+    classes now defined in ``repro.power.manager`` (re-exported, so
+    isinstance checks hold across old and new import paths), and
+  * ``PowerSteeringController`` is a thin wrapper over
+    ``repro.power.PowerManager`` — new code should construct a
+    ``PowerManager`` directly and use its ``schedule`` / ``phase()`` /
+    ``observe()`` session API.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
-from repro.core import metrics
-from repro.core.tasks import TaskTable
 from repro.hw.tpu import DEFAULT_SUPERCHIP, SuperchipSpec
+from repro.power.manager import (CapDecision, CapSchedule, PowerGoal,
+                                 PowerManager, SteeringGoal)
+from repro.core.tasks import TaskTable
 
-
-@dataclasses.dataclass(frozen=True)
-class SteeringGoal:
-    """User-defined filter over candidate caps (paper section 4, last par.)."""
-
-    metric: str = "sed"                       # "sed" | "ed"
-    max_runtime_increase_pct: float | None = None
-    min_energy_saving_pct: float | None = None
-
-
-@dataclasses.dataclass(frozen=True)
-class CapDecision:
-    task: str
-    cap: float
-    metric: str
-    energy_reduction_pct: float
-    runtime_increase_pct: float
-
-
-@dataclasses.dataclass
-class CapSchedule:
-    """phase name -> superchip cap (W), plus transition cost accounting."""
-
-    caps: dict[str, float]
-    default_cap: float
-    transition_seconds: float = 100e-6   # one hwmon power-limit write
-    transition_energy_j: float = 2e-3
-
-    def cap_for(self, phase: str) -> float:
-        return self.caps.get(phase, self.default_cap)
-
-    def transitions(self, phase_sequence: list[str]) -> int:
-        """Number of cap changes across a phase sequence (coalescing equal
-        neighboring caps — no API write if the cap does not change)."""
-        n, prev = 0, None
-        for ph in phase_sequence:
-            cap = self.cap_for(ph)
-            if prev is not None and cap != prev:
-                n += 1
-            prev = cap
-        return n
-
-    def overhead(self, phase_sequence: list[str]) -> tuple[float, float]:
-        n = self.transitions(phase_sequence)
-        return n * self.transition_seconds, n * self.transition_energy_j
+__all__ = ["PowerSteeringController", "SteeringGoal", "PowerGoal",
+           "CapSchedule", "CapDecision"]
 
 
 class PowerSteeringController:
-    """Selects per-task caps from a TaskTable using the paper's metrics."""
+    """Deprecated offline controller; delegates to ``PowerManager``."""
 
     def __init__(self, spec: SuperchipSpec = DEFAULT_SUPERCHIP):
+        warnings.warn(
+            "PowerSteeringController is deprecated; use "
+            "repro.power.PowerManager", DeprecationWarning, stacklevel=2)
         self.spec = spec
 
-    # -- selection ---------------------------------------------------------
     def decide(self, table: TaskTable,
                goal: SteeringGoal = SteeringGoal()) -> list[CapDecision]:
-        decisions = []
-        for task in table.tasks():
-            cap = self._pick(table, task, goal)
-            base = table.baseline(task)
-            row = table.at(task, cap)
-            decisions.append(CapDecision(
-                task=task, cap=cap, metric=goal.metric,
-                energy_reduction_pct=(base.energy - row.energy)
-                / base.energy * 100 if base.energy else 0.0,
-                runtime_increase_pct=(row.runtime - base.runtime)
-                / base.runtime * 100 if base.runtime else 0.0,
-            ))
-        return decisions
+        return PowerManager(table, goal=goal, spec=self.spec).decide()
 
-    def _pick(self, table: TaskTable, task: str, goal: SteeringGoal) -> float:
-        if goal.metric == "sed":
-            cap = metrics.sed_optimal_cap(table, task)
-            score = metrics.speedup_energy_delay(table, task)
-            order = sorted(score, key=lambda c: -score[c])
-        elif goal.metric == "ed":
-            cap = metrics.ed_optimal_cap(table, task)
-            score = metrics.euclidean_distance(table, task)
-            order = sorted(score, key=lambda c: score[c])
-        else:
-            raise ValueError(f"unknown metric {goal.metric!r}")
-
-        if goal.max_runtime_increase_pct is None and \
-           goal.min_energy_saving_pct is None:
-            return cap
-
-        base = table.baseline(task)
-        for cand in order:  # best-first, take first satisfying the goal
-            row = table.at(task, cand)
-            dt = (row.runtime - base.runtime) / base.runtime * 100 \
-                if base.runtime else 0.0
-            de = (base.energy - row.energy) / base.energy * 100 \
-                if base.energy else 0.0
-            if goal.max_runtime_increase_pct is not None and \
-               dt > goal.max_runtime_increase_pct:
-                continue
-            if goal.min_energy_saving_pct is not None and \
-               de < goal.min_energy_saving_pct:
-                continue
-            return cand
-        return table.baseline(task).cap  # nothing satisfies: stay uncapped
-
-    # -- schedule ------------------------------------------------------------
     def schedule(self, table: TaskTable,
                  goal: SteeringGoal = SteeringGoal()) -> CapSchedule:
-        decisions = self.decide(table, goal)
-        return CapSchedule(
-            caps={d.task: d.cap for d in decisions},
-            default_cap=self.spec.p_default,
-        )
+        return PowerManager(table, goal=goal, spec=self.spec).schedule

@@ -22,6 +22,17 @@ from typing import Iterable
 from repro.hw.dvfs import WorkProfile
 from repro.hw.tpu import ChipSpec, DEFAULT_CHIP
 
+#: Cap values within this many watts are the same setting.  Real power-API
+#: writes quantize to whole watts (hwmon takes microwatts but firmware
+#: granularity is ~1 W); float noise from arithmetic on caps must not
+#: create phantom "different" settings.
+CAP_TOLERANCE_W = 1e-6
+
+
+def caps_equal(a: float, b: float, tol: float = CAP_TOLERANCE_W) -> bool:
+    """Whether two cap values denote the same power-limit setting."""
+    return abs(a - b) <= tol
+
 
 @dataclasses.dataclass(frozen=True)
 class Task:
@@ -71,26 +82,63 @@ class TaskTable:
 
     def __init__(self, measurements: Iterable[TaskMeasurement]):
         self.rows: list[TaskMeasurement] = list(measurements)
+        self._reindex()
+
+    def _reindex(self) -> None:
+        # task -> {cap: row position}; exact-key hit first, tolerance scan
+        # over the (few) caps of one task as the fallback.
+        self._index: dict[str, dict[float, int]] = {}
+        for i, r in enumerate(self.rows):
+            self._index.setdefault(r.task, {})[r.cap] = i
+
+    def _row_pos(self, task: str, cap: float) -> int:
+        by_cap = self._index.get(task)
+        if by_cap is None:
+            raise KeyError((task, cap))
+        pos = by_cap.get(cap)
+        if pos is not None:
+            return pos
+        for c, i in by_cap.items():
+            if caps_equal(c, cap):
+                return i
+        raise KeyError((task, cap))
 
     # -- access ----------------------------------------------------------
     def tasks(self) -> list[str]:
-        seen: dict[str, None] = {}
-        for r in self.rows:
-            seen.setdefault(r.task, None)
-        return list(seen)
+        return list(self._index)
 
     def caps(self) -> list[float]:
         return sorted({r.cap for r in self.rows})
 
     def at(self, task: str, cap: float) -> TaskMeasurement:
-        for r in self.rows:
-            if r.task == task and r.cap == cap:
-                return r
-        raise KeyError((task, cap))
+        return self.rows[self._row_pos(task, cap)]
 
     def for_task(self, task: str) -> list[TaskMeasurement]:
-        return sorted((r for r in self.rows if r.task == task),
+        pos = self._index.get(task, {})
+        return sorted((self.rows[i] for i in pos.values()),
                       key=lambda r: r.cap)
+
+    # -- online refinement -------------------------------------------------
+    def observe(self, m: TaskMeasurement,
+                alpha: float = 0.5) -> TaskMeasurement:
+        """Blend one online observation into the table (EWMA with weight
+        ``alpha`` on the new sample).  A (task, cap) pair never seen before
+        is inserted as-is.  Returns the stored row."""
+        try:
+            pos = self._row_pos(m.task, m.cap)
+        except KeyError:
+            self.rows.append(m)
+            self._index.setdefault(m.task, {})[m.cap] = len(self.rows) - 1
+            return m
+        old = self.rows[pos]
+        blended = dataclasses.replace(
+            old,
+            runtime=(1 - alpha) * old.runtime + alpha * m.runtime,
+            energy=(1 - alpha) * old.energy + alpha * m.energy,
+            clock_fraction=(1 - alpha) * old.clock_fraction
+            + alpha * m.clock_fraction)
+        self.rows[pos] = blended
+        return blended
 
     def baseline(self, task: str) -> TaskMeasurement:
         """The default (highest) cap row — the paper's 1000 W baseline."""

@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \
       --requests 8 --new 16
+
+The engine runs prefill and decode under distinct phase caps from a
+``repro.power.PowerManager`` (compute-bound prefill stays near max;
+memory-bound decode drops low), and the modeled energy ledger is printed
+after the batch drains.
 """
 
 from __future__ import annotations
@@ -15,7 +20,8 @@ from repro.configs.registry import ARCH_IDS, get_model_config, get_run_config
 from repro.models import lm
 from repro.models.layers import Ctx
 from repro.models.params import init_params
-from repro.serving.engine import Request, ServeEngine
+from repro.power import PowerManager, available_metrics
+from repro.serving.engine import Request, ServeEngine, serve_phase_tasks
 from repro.sharding import RULE_SETS
 
 
@@ -27,6 +33,8 @@ def main() -> None:
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--power-metric", default="sed",
+                    choices=available_metrics())
     args = ap.parse_args()
 
     cfg = get_model_config(args.arch)
@@ -37,8 +45,19 @@ def main() -> None:
     run = get_run_config(args.arch, remat="none", logits_chunk=64)
     ctx = Ctx(run, RULE_SETS[run.serve_rules_name], None)
     params = init_params(lm.model_decls(cfg), jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, run, ctx, params,
-                         batch_size=args.batch_size, max_seq=args.max_seq)
+
+    # phase caps for the FULL arch at production serving scale; the engine
+    # below drives the same phases on the reduced model
+    full = get_model_config(args.arch)
+    pm = PowerManager(
+        tasks=serve_phase_tasks(full, batch=128, prompt=32768,
+                                new_tokens=args.new, chips=256),
+        metric=args.power_metric)
+    print(f"[caps:{args.power_metric}] "
+          f"{ {k: round(v) for k, v in pm.schedule.caps.items()} }")
+
+    engine = ServeEngine(cfg, run, ctx, params, batch_size=args.batch_size,
+                         max_seq=args.max_seq, power=pm)
     reqs = [Request(uid=i, prompt=[(5 * i + j) % cfg.vocab
                                    for j in range(4 + i % 5)],
                     max_new_tokens=args.new)
@@ -47,6 +66,11 @@ def main() -> None:
     for r in done:
         print(f"req {r.uid}: {len(r.generated)} tokens -> "
               f"{r.generated[:8]}{'...' if len(r.generated) > 8 else ''}")
+    e = pm.account_step()
+    dt, de = pm.overhead_totals()
+    print(f"[energy] modeled step {e['energy_j']:.1f}J "
+          f"(-{e['energy_saving_pct']:.1f}% vs uncapped); "
+          f"{pm.transitions} cap writes ({de*1e3:.1f} mJ overhead)")
 
 
 if __name__ == "__main__":

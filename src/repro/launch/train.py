@@ -22,15 +22,15 @@ import jax.numpy as jnp
 from repro.ckpt import checkpoint
 from repro.configs.base import reduced as reduce_cfg
 from repro.configs.registry import ARCH_IDS, get_model_config, get_run_config
-from repro.core import PowerSteeringController, SteeringGoal, measure_sweep
 from repro.data.pipeline import DataConfig, TokenSource
 from repro.hw.tpu import DEFAULT_SUPERCHIP
 from repro.launch.mesh import make_mesh_for
 from repro.models.layers import Ctx
+from repro.power import PodPowerArbiter, PowerManager, available_metrics
 from repro.runtime.supervisor import PreemptionGuard, StragglerWatchdog, \
     Supervisor
 from repro.sharding import RULE_SETS, tree_shardings
-from repro.train.phases import PhaseEnergyLedger, training_phase_tasks
+from repro.train.phases import training_phase_tasks
 from repro.train.step import (abstract_state, init_state, make_train_step,
                               state_logical_axes)
 
@@ -51,7 +51,10 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=20)
-    ap.add_argument("--power-metric", default="sed", choices=["sed", "ed"])
+    ap.add_argument("--power-metric", default="sed",
+                    choices=available_metrics())
+    ap.add_argument("--pod-budget-frac", type=float, default=0.85,
+                    help="pod power budget as a fraction of N x p_max")
     ap.add_argument("--max-restarts", type=int, default=2)
     args = ap.parse_args()
 
@@ -77,11 +80,23 @@ def main() -> None:
         num_hosts=jax.process_count(), host_id=jax.process_index()))
     os.makedirs(args.ckpt_dir, exist_ok=True)
 
+    chips = max(jax.device_count(), 1)
     tasks = training_phase_tasks(cfg, batch=args.batch, seq=args.seq,
-                                 chips=max(jax.device_count(), 1))
-    sched = PowerSteeringController(DEFAULT_SUPERCHIP).schedule(
-        measure_sweep(tasks), SteeringGoal(metric=args.power_metric))
-    ledger = PhaseEnergyLedger(sched, tasks, min_dwell_s=2e-4)
+                                 chips=chips)
+    pm = PowerManager(tasks=tasks, metric=args.power_metric,
+                      spec=DEFAULT_SUPERCHIP, min_dwell_s=2e-4)
+    if chips > 1 and pm.schedule.caps:
+        # one pod budget split across superchips: each chip runs the same
+        # phase mix here, so requests are uniform and grants symmetric.
+        # Demo on the hungriest scheduled phase (phase names differ per
+        # family: attention vs ssd_scan).
+        phase0 = max(pm.schedule.caps, key=pm.schedule.caps.get)
+        arbiter = PodPowerArbiter(
+            budget_w=args.pod_budget_frac * chips * DEFAULT_SUPERCHIP.p_max)
+        grants = arbiter.split_phase(
+            {f"chip{i}": pm.schedule for i in range(chips)}, phase0)
+        print(f"[pod] budget {arbiter.budget_w:.0f}W over {chips} chips; "
+              f"{phase0}-phase grant {next(iter(grants.values())):.0f}W")
 
     def train_once(restart: int) -> str:
         state = init_state(cfg, run, jax.random.PRNGKey(0)).tree()
@@ -103,7 +118,7 @@ def main() -> None:
                 state, metrics = step_fn(state, batch)
                 slow = watchdog.observe(i, time.perf_counter() - t0)
                 if i % 10 == 0 or slow:
-                    e = ledger.account_step()
+                    e = pm.account_step()
                     print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
                           f"E={e['energy_j']:.2f}J "
                           f"(-{e['energy_saving_pct']:.1f}%)"

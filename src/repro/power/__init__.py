@@ -1,0 +1,37 @@
+"""``repro.power`` — the single public API for everything power.
+
+Layers (paper section 2-4, plus its section-5 future work as a runtime):
+
+  metrics.py   Metric protocol + registry (sed / ed / user-defined)
+  backends.py  CapBackend HAL: simulated, logging, hwmon-stub writes
+  manager.py   PowerManager session: decide -> phase() -> observe() ->
+               re-decide, plus CapSchedule and modeled step accounting
+  arbiter.py   PodPowerArbiter: one pod budget across N superchips
+
+Quick start::
+
+    from repro.power import PowerManager
+    pm = PowerManager(tasks=training_phase_tasks(cfg, batch, seq))
+    with pm.phase("attention"):
+        ...                      # runs under the attention cap
+    stats = pm.account_step()    # modeled energy vs uncapped
+
+``repro.core.steering`` remains as a deprecation shim over this package.
+"""
+
+from repro.power.metrics import (Metric, available_metrics, get_metric,
+                                 optimal_cap, rank_caps, register_metric)
+from repro.power.backends import (CapBackend, HwmonBackend, LoggingBackend,
+                                  SimulatedBackend)
+from repro.power.manager import (CapDecision, CapSchedule, PhaseRecord,
+                                 PowerGoal, PowerManager, SteeringGoal)
+from repro.power.arbiter import PodPowerArbiter
+
+__all__ = [
+    "Metric", "register_metric", "get_metric", "available_metrics",
+    "optimal_cap", "rank_caps",
+    "CapBackend", "SimulatedBackend", "LoggingBackend", "HwmonBackend",
+    "PowerGoal", "SteeringGoal", "CapDecision", "CapSchedule",
+    "PhaseRecord", "PowerManager",
+    "PodPowerArbiter",
+]

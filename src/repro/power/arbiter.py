@@ -1,0 +1,59 @@
+"""PodPowerArbiter: split one pod-level power budget across superchips.
+
+System-scale power management (the ORNL study, arXiv 2408.01552) caps at
+the cabinet/pod level; each superchip's PowerManager then *requests* a cap
+per phase and the arbiter grants what the shared budget allows.  Grants
+are proportional above a per-superchip floor (deep-idle draw can't be
+capped away), so the budget is conserved: the sum of grants equals the
+budget whenever requests exceed it, and equals the requests when they fit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.hw.tpu import DEFAULT_SUPERCHIP, SuperchipSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PodPowerArbiter:
+    """Proportional-above-floor splitter for one pod budget (watts)."""
+
+    budget_w: float
+    spec: SuperchipSpec = dataclasses.field(
+        default_factory=lambda: DEFAULT_SUPERCHIP)
+    floor_w: float | None = None   # default: host idle + chip deep-idle
+
+    @property
+    def floor(self) -> float:
+        if self.floor_w is not None:
+            return self.floor_w
+        return self.spec.host.p_idle + self.spec.chip.p_idle_floor
+
+    def split(self, requests: dict[str, float]) -> dict[str, float]:
+        """Grant caps for ``{superchip_id: requested_cap_w}``.
+
+        Requests are clamped to [floor, spec.p_max].  If the clamped sum
+        fits the budget, everyone gets their request; otherwise the excess
+        above the floor is scaled down uniformly so the grants sum exactly
+        to the budget (when the budget covers the floors — below that the
+        floors win and the pod is physically over budget)."""
+        if not requests:
+            return {}
+        floor, ceil = self.floor, self.spec.p_max
+        req = {k: min(max(v, floor), ceil) for k, v in requests.items()}
+        total = sum(req.values())
+        if total <= self.budget_w:
+            return req
+        n = len(req)
+        spread = total - n * floor
+        avail = max(self.budget_w - n * floor, 0.0)
+        scale = avail / spread if spread > 0 else 0.0
+        return {k: floor + (v - floor) * scale for k, v in req.items()}
+
+    def split_phase(self, schedules: dict[str, "object"],
+                    phase: str) -> dict[str, float]:
+        """Convenience: grants for one phase across per-chip CapSchedules
+        (or anything with ``cap_for``)."""
+        return self.split({k: s.cap_for(phase)
+                           for k, s in schedules.items()})

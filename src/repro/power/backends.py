@@ -1,0 +1,130 @@
+"""Cap backends: the hardware-abstraction layer under ``PowerManager``.
+
+A backend owns (a) the actual power-limit write and (b) the cost of one
+write (``transition_seconds`` / ``transition_energy_j``) — previously
+hard-coded in ``CapSchedule``.  Backends that can also *measure* a task
+under a cap (the analytic model stands in for Score-P/PAPI/NVML in this
+container) return ``TaskMeasurement`` from ``measure``; write-only
+backends return ``None`` and the manager falls back to its table.
+
+  SimulatedBackend  drives the energy ledger via the DVFS model (default)
+  LoggingBackend    wraps any backend, recording every applied cap
+  HwmonBackend      stub for real sysfs power-API writes (gated: inert
+                    unless the hwmon node exists)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+from repro.core.power_model import NoiseModel, measure_sweep, simulate_task
+from repro.core.tasks import Task, TaskMeasurement, TaskTable
+from repro.hw.tpu import DEFAULT_SUPERCHIP, SuperchipSpec
+
+#: One hwmon power-limit write: syscall + firmware ack (paper section 4:
+#: per-task capping must amortize its switching overhead).
+TRANSITION_SECONDS = 100e-6
+TRANSITION_ENERGY_J = 2e-3
+
+
+@runtime_checkable
+class CapBackend(Protocol):
+    """Applies superchip power caps and prices cap transitions."""
+
+    transition_seconds: float
+    transition_energy_j: float
+
+    def apply(self, cap: float) -> None:
+        """Set the power limit to ``cap`` watts (one power-API write)."""
+        ...
+
+    def measure(self, task: Task, cap: float) -> Optional[TaskMeasurement]:
+        """Run/estimate ``task`` under ``cap``; None if this backend cannot
+        measure (write-only hardware paths)."""
+        ...
+
+
+@dataclasses.dataclass
+class SimulatedBackend:
+    """Analytic DVFS-model backend: 'applying' a cap is bookkeeping, and
+    measurement comes from the first-principles power model."""
+
+    spec: SuperchipSpec = dataclasses.field(
+        default_factory=lambda: DEFAULT_SUPERCHIP)
+    noise: NoiseModel | None = None
+    transition_seconds: float = TRANSITION_SECONDS
+    transition_energy_j: float = TRANSITION_ENERGY_J
+    current_cap: float | None = None
+    writes: int = 0
+
+    def apply(self, cap: float) -> None:
+        self.current_cap = cap
+        self.writes += 1
+
+    def measure(self, task: Task, cap: float) -> TaskMeasurement:
+        return simulate_task(task, cap, self.spec, self.noise)
+
+    def sweep(self, tasks: list[Task],
+              caps: tuple[float, ...] | None = None) -> TaskTable:
+        """The paper's offline experiment: every task at every cap."""
+        return measure_sweep(tasks, caps, self.spec, self.noise)
+
+
+@dataclasses.dataclass
+class LoggingBackend:
+    """Decorator backend: records every applied cap (and forwards to an
+    inner backend when given one) — the audit trail for production runs."""
+
+    inner: CapBackend | None = None
+    log: list[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def transition_seconds(self) -> float:
+        return self.inner.transition_seconds if self.inner \
+            else TRANSITION_SECONDS
+
+    @property
+    def transition_energy_j(self) -> float:
+        return self.inner.transition_energy_j if self.inner \
+            else TRANSITION_ENERGY_J
+
+    def apply(self, cap: float) -> None:
+        self.log.append(cap)
+        if self.inner is not None:
+            self.inner.apply(cap)
+
+    def measure(self, task: Task, cap: float) -> Optional[TaskMeasurement]:
+        return self.inner.measure(task, cap) if self.inner else None
+
+
+class HwmonBackend:
+    """Real power-API write path (stub): ``power1_cap`` under a hwmon node,
+    in microwatts.  Inert in this container — ``available()`` is False when
+    the node does not exist, and ``apply`` refuses rather than pretending.
+
+    On GH200-class hosts the node is e.g.
+    ``/sys/class/hwmon/hwmon*/device/power1_cap``; deployment wires the
+    concrete path in.
+    """
+
+    transition_seconds = TRANSITION_SECONDS
+    transition_energy_j = TRANSITION_ENERGY_J
+
+    def __init__(self, node: str = "/sys/class/hwmon/hwmon0/power1_cap"):
+        self.node = node
+
+    def available(self) -> bool:
+        import os
+        return os.access(self.node, os.W_OK)
+
+    def apply(self, cap: float) -> None:
+        if not self.available():
+            raise RuntimeError(
+                f"hwmon node {self.node} not writable; use "
+                "SimulatedBackend in environments without power telemetry")
+        with open(self.node, "w") as f:
+            f.write(str(int(cap * 1e6)))  # watts -> microwatts
+
+    def measure(self, task: Task, cap: float) -> None:
+        return None  # write-only: measurements come from real telemetry

@@ -9,6 +9,7 @@ lower ``make_prefill_step``.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
@@ -16,8 +17,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunConfig
+from repro.core.tasks import Task
 from repro.models import lm
 from repro.models.layers import Ctx
+
+
+def serve_phase_tasks(cfg: ModelConfig, batch: int, prompt: int,
+                      new_tokens: int, chips: int = 1) -> list[Task]:
+    """Prefill vs decode phases with analytic roofline terms — the serving
+    analogue of ``train.phases.training_phase_tasks``.  Prefill is
+    compute-bound (wants a high cap per SED); decode streams the KV cache
+    (memory-bound — a low cap is nearly free)."""
+    from repro.hw import flops as F
+    n = F.active_param_count(cfg)
+    prefill_flops = 2.0 * n * batch * prompt \
+        + F._attention_flops_fwd(cfg, batch, prompt, prompt)
+    decode_flops = 2.0 * n * batch
+    cache = F._cache_bytes(cfg, batch, prompt)
+    return [
+        Task("prefill", flops=prefill_flops / chips,
+             hbm_bytes=(2.0 * n + cache) / chips),
+        Task("decode", flops=decode_flops / chips,
+             hbm_bytes=(2.0 * n + cache) / chips, calls=new_tokens),
+    ]
 
 
 def make_prefill_step(cfg: ModelConfig, run: RunConfig, ctx: Ctx,
@@ -74,30 +96,52 @@ class ServeEngine:
 
     Demonstrates the production pattern: fixed-size running batch, per-slot
     request swap-in on completion (continuous batching), one jitted decode.
+
+    When a ``repro.power.PowerManager`` is attached, prefill and decode run
+    under their own phase caps (``pm.phase("prefill")`` /
+    ``pm.phase("decode")``) — the serving form of the paper's per-task
+    capping: compute-bound prefill keeps a high cap, memory-bound decode a
+    low one.
     """
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, ctx: Ctx, params,
-                 batch_size: int = 4, max_seq: int = 256):
+                 batch_size: int = 4, max_seq: int = 256, power=None):
         self.cfg, self.run, self.ctx = cfg, run, ctx
         self.params = params
         self.batch_size, self.max_seq = batch_size, max_seq
+        self.power = power   # Optional[repro.power.PowerManager]
         self.prefill = jax.jit(make_prefill_step(cfg, run, ctx, max_seq))
         self.decode = jax.jit(make_decode_step(cfg, run, ctx))
 
+    def _phase(self, name: str):
+        return (self.power.phase(name) if self.power is not None
+                else contextlib.nullcontext())
+
+    def _take_batch(self, pending: list[Request]) -> list[Request]:
+        """Next batch of equal-prompt-length requests.  Ragged batches used
+        to be left-padded, which fed pad tokens to prefill as real tokens
+        (KV-cache and SSM-state pollution) and shared one ``index = plen``
+        across slots (wrong positions for shorter prompts).  Equal-length
+        bucketing removes both failure modes for every model family; a
+        production engine would chunk prefill per slot instead."""
+        plen = len(pending[0].prompt)
+        return [r for r in pending
+                if len(r.prompt) == plen][:self.batch_size]
+
     def generate(self, requests: list[Request]) -> list[Request]:
-        pending = list(requests)
+        pending = sorted(requests, key=lambda r: len(r.prompt))
         done: list[Request] = []
         while pending:
-            active = pending[:self.batch_size]
-            pending = pending[self.batch_size:]
-            plen = max(len(r.prompt) for r in active)
-            toks = jnp.array(
-                [r.prompt[-1:] * 0 + [0] * (plen - len(r.prompt)) + r.prompt
-                 for r in active], dtype=jnp.int32)
+            active = self._take_batch(pending)
+            taken = {id(r) for r in active}
+            pending = [r for r in pending if id(r) not in taken]
+            plen = len(active[0].prompt)   # per-slot length, uniform batch
+            toks = jnp.array([r.prompt for r in active], dtype=jnp.int32)
             if len(active) < self.batch_size:
                 padrows = self.batch_size - len(active)
                 toks = jnp.pad(toks, ((0, padrows), (0, 0)))
-            cache, logits = self.prefill(self.params, {"tokens": toks})
+            with self._phase("prefill"):
+                cache, logits = self.prefill(self.params, {"tokens": toks})
             index = plen
             cur = jnp.argmax(logits[:, 0], axis=-1)
             steps = max(r.max_new_tokens for r in active)
@@ -105,12 +149,13 @@ class ServeEngine:
                 for i, r in enumerate(active):
                     if not r.done:
                         r.generated.append(int(cur[i]))
-                cache, logits = self.decode(self.params, cache,
-                                            cur[:, None].astype(jnp.int32),
-                                            jnp.asarray(index, jnp.int32))
-                cur = jnp.argmax(logits, axis=-1)
-                index += 1
                 if all(r.done for r in active):
                     break
+                with self._phase("decode"):
+                    cache, logits = self.decode(
+                        self.params, cache, cur[:, None].astype(jnp.int32),
+                        jnp.asarray(index, jnp.int32))
+                cur = jnp.argmax(logits, axis=-1)
+                index += 1
             done.extend(active)
         return done

@@ -15,11 +15,10 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.power_model import simulate_task
-from repro.core.steering import CapSchedule
 from repro.core.tasks import Task
 from repro.hw.tpu import ChipSpec, DEFAULT_CHIP, DEFAULT_SUPERCHIP
 from repro.models import lm
+from repro.power import CapSchedule, PowerManager
 
 
 def training_phase_tasks(cfg: ModelConfig, batch: int, seq: int,
@@ -74,53 +73,42 @@ def training_phase_tasks(cfg: ModelConfig, batch: int, seq: int,
 
 @dataclasses.dataclass
 class PhaseEnergyLedger:
-    """Per-step modeled energy accounting under a CapSchedule.
+    """Per-step modeled energy accounting — a thin view over PowerManager.
+
+    Rebuilt on ``repro.power``: the dwell filter, transition pricing, and
+    the accounting itself live in ``PowerManager.account_step``; this class
+    keeps the historical (schedule, tasks) construction working.  Pass a
+    ``PowerManager`` as ``schedule`` to reuse an existing session; a bare
+    ``CapSchedule`` gets a private simulated session.
 
     ``min_dwell_s``: phases shorter than this inherit the previous applied
     cap instead of triggering a power-API write — cap transitions are not
-    free (schedule.transition_*), so sub-millisecond phases coalesce.  This
-    is the production form of the paper's observation that per-task capping
-    must amortize its switching overhead."""
+    free, so sub-millisecond phases coalesce.  This is the production form
+    of the paper's observation that per-task capping must amortize its
+    switching overhead."""
 
-    schedule: CapSchedule
+    schedule: "CapSchedule | PowerManager"
     tasks: list[Task]
     spec: object = dataclasses.field(default_factory=lambda: DEFAULT_SUPERCHIP)
-    min_dwell_s: float = 1e-3
+    min_dwell_s: float | None = None   # None: inherit the manager's (1e-3)
+
+    def __post_init__(self):
+        if isinstance(self.schedule, PowerManager):
+            self.pm = self.schedule
+            self.pm.tasks.update({t.name: t for t in self.tasks})
+            if self.min_dwell_s is not None:
+                self.pm.min_dwell_s = self.min_dwell_s
+            else:
+                self.min_dwell_s = self.pm.min_dwell_s
+        else:
+            if self.min_dwell_s is None:
+                self.min_dwell_s = 1e-3
+            self.pm = PowerManager(tasks=self.tasks, spec=self.spec,
+                                   schedule=self.schedule,
+                                   min_dwell_s=self.min_dwell_s)
 
     def applied_caps(self) -> list[tuple[str, float]]:
-        out = []
-        prev = self.schedule.default_cap
-        for task in self.tasks:
-            base = simulate_task(task, self.spec.p_default, self.spec)
-            cap = (self.schedule.cap_for(task.name)
-                   if base.runtime >= self.min_dwell_s else prev)
-            out.append((task.name, cap))
-            prev = cap
-        return out
+        return self.pm.applied_caps(self.tasks)
 
     def account_step(self) -> dict:
-        e_capped = t_capped = e_open = t_open = 0.0
-        caps = self.applied_caps()
-        transitions = 0
-        prev = None
-        for task, (_, cap) in zip(self.tasks, caps):
-            if prev is not None and cap != prev:
-                transitions += 1
-            prev = cap
-            m = simulate_task(task, cap, self.spec)
-            b = simulate_task(task, self.spec.p_default, self.spec)
-            e_capped += m.energy
-            t_capped += m.runtime
-            e_open += b.energy
-            t_open += b.runtime
-        e_capped += transitions * self.schedule.transition_energy_j
-        t_capped += transitions * self.schedule.transition_seconds
-        return {
-            "energy_j": e_capped, "runtime_s": t_capped,
-            "energy_uncapped_j": e_open, "runtime_uncapped_s": t_open,
-            "transitions": transitions,
-            "energy_saving_pct": (e_open - e_capped) / e_open * 100
-            if e_open else 0.0,
-            "runtime_increase_pct": (t_capped - t_open) / t_open * 100
-            if t_open else 0.0,
-        }
+        return self.pm.account_step(self.tasks)

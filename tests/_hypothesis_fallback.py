@@ -1,0 +1,70 @@
+"""Tiny deterministic stand-in for ``hypothesis`` when it is not installed.
+
+Only the surface the test suite uses is provided: ``st.floats``,
+``st.tuples``, ``st.lists``, ``@given`` and ``@settings``.  ``given`` runs
+the test body over a fixed-seed batch of generated examples, so the
+property tests still exercise a spread of inputs (just without shrinking
+or the full search strategies of real hypothesis).
+
+Import pattern (so real hypothesis is preferred when present):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+    @staticmethod
+    def lists(strat: _Strategy, min_size: int = 0,
+              max_size: int | None = None, **_kw) -> _Strategy:
+        def draw(rng: random.Random):
+            hi = max_size if max_size is not None else min_size + 8
+            n = rng.randint(min_size, hi)
+            return [strat.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(**_kw):
+    """No-op decorator (example count is fixed in this fallback)."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        def wrapper():
+            # crc32, not hash(): str hashing is salted per process and
+            # would make failures unreproducible across runs
+            rng = random.Random(0xC0FFEE ^ zlib.crc32(fn.__name__.encode()))
+            for _ in range(_MAX_EXAMPLES):
+                fn(*(s.example(rng) for s in strats))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -3,7 +3,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (TaskMeasurement, TaskTable, aggregate_table2,
                         ed_argmin_is_pareto, ed_optimal_cap,

@@ -1,0 +1,278 @@
+"""Tests for the ``repro.power`` runtime: metric registry, goal filters,
+backends, the PowerManager session (online re-decide), and the pod
+arbiter."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (ed_optimal_cap, measure_sweep, sed_optimal_cap,
+                        simulate_task)
+from repro.core.tasks import Task, TaskMeasurement, TaskTable, caps_equal
+from repro.hw.tpu import DEFAULT_SUPERCHIP
+from repro.models.lsms import paper_calibrated_tasks
+from repro.power import (CapSchedule, HwmonBackend, LoggingBackend,
+                         PodPowerArbiter, PowerGoal, PowerManager,
+                         SimulatedBackend, available_metrics, get_metric,
+                         register_metric)
+
+SPEC = DEFAULT_SUPERCHIP
+CHIP = SPEC.chip
+
+
+@pytest.fixture(scope="module")
+def table():
+    return measure_sweep(paper_calibrated_tasks())
+
+
+# ---------------------------------------------------------------------------
+# metric registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_metrics_registered():
+    assert {"sed", "ed"} <= set(available_metrics())
+    assert get_metric("sed").higher_is_better
+    assert not get_metric("ed").higher_is_better
+
+
+def test_registry_roundtrip_matches_old_code_paths(table):
+    """String name -> same caps as the historical sed/ed argmin functions,
+    for every task."""
+    for name, pick in (("sed", sed_optimal_cap), ("ed", ed_optimal_cap)):
+        decided = {d.task: d.cap
+                   for d in PowerManager(table, metric=name).decide()}
+        for task in table.tasks():
+            assert decided[task] == pick(table, task), (name, task)
+
+
+def test_metric_instance_accepted(table):
+    m = get_metric("ed")
+    caps = {d.task: d.cap for d in PowerManager(table, metric=m).decide()}
+    for task in table.tasks():
+        assert caps[task] == ed_optimal_cap(table, task)
+
+
+def test_user_defined_metric_plugs_in(table):
+    @register_metric("always-floor")
+    class FloorMetric:
+        higher_is_better = False
+
+        def score(self, tbl, task):
+            return {r.cap: r.cap for r in tbl.for_task(task)}
+
+    pm = PowerManager(table, metric="always-floor")
+    lowest = min(table.caps())
+    assert all(d.cap == lowest for d in pm.decide())
+
+
+def test_unknown_metric_rejected(table):
+    with pytest.raises(ValueError, match="unknown metric"):
+        PowerManager(table, metric="nope").decide()
+
+
+# ---------------------------------------------------------------------------
+# goal filters
+# ---------------------------------------------------------------------------
+
+def test_goal_unsatisfiable_stays_uncapped(table):
+    pm = PowerManager(table, goal=PowerGoal(metric="ed",
+                                            min_energy_saving_pct=99.0))
+    assert all(d.cap == SPEC.p_default for d in pm.decide())
+
+
+def test_goal_runtime_constraint_respected(table):
+    pm = PowerManager(table, goal=PowerGoal(metric="ed",
+                                            max_runtime_increase_pct=5.0))
+    for d in pm.decide():
+        assert d.runtime_increase_pct <= 5.0 + 1e-9
+
+
+def test_goal_zero_runtime_increase_always_satisfiable(table):
+    """dt<=0 always admits the baseline cap itself, so zero-increase goals
+    never fall through to the uncapped fallback in an inconsistent way."""
+    pm = PowerManager(table, goal=PowerGoal(metric="sed",
+                                            max_runtime_increase_pct=0.0))
+    for d in pm.decide():
+        assert d.runtime_increase_pct <= 1e-9
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+def test_simulated_backend_counts_writes():
+    b = SimulatedBackend()
+    pm = PowerManager(tasks=paper_calibrated_tasks(), backend=b)
+    with pm.phase("zgemm_ts64"):
+        pass
+    with pm.phase("zgemm_ts64"):   # same cap: coalesced, no extra write
+        pass
+    assert b.writes == 1 and pm.transitions == 1
+    assert b.current_cap == pm.schedule.cap_for("zgemm_ts64")
+
+
+def test_logging_backend_records_and_forwards():
+    inner = SimulatedBackend()
+    b = LoggingBackend(inner=inner)
+    pm = PowerManager(tasks=paper_calibrated_tasks(), backend=b)
+    with pm.phase("zgemm_ts64"):
+        pass
+    with pm.phase("buildKKRMatrix"):
+        pass
+    assert b.log == [pm.schedule.cap_for("zgemm_ts64"),
+                     pm.schedule.cap_for("buildKKRMatrix")]
+    assert inner.writes == 2
+
+
+def test_infinite_sed_score_matches_old_argmin():
+    """A zero-product row makes SED infinite; the registry pick must match
+    the historical sed_optimal_cap (lowest cap among the infinite ones),
+    not crash on inf arithmetic."""
+    rows = [TaskMeasurement("t", c, runtime=1.0, energy=0.0 if c <= 120 else 5.0)
+            for c in SPEC.cap_sweep()]
+    tbl = TaskTable(rows)
+    caps = {d.task: d.cap for d in PowerManager(tbl, metric="sed").decide()}
+    assert caps["t"] == sed_optimal_cap(tbl, "t") == 90.0
+
+
+def test_writeonly_backend_without_table_raises_clear_error():
+    pm = PowerManager(tasks=paper_calibrated_tasks(),
+                      backend=HwmonBackend(node="/nonexistent/power1_cap"))
+    with pytest.raises(RuntimeError, match="cannot measure"):
+        pm.account_step()
+
+
+def test_hwmon_backend_gated(tmp_path):
+    b = HwmonBackend(node=str(tmp_path / "missing" / "power1_cap"))
+    assert not b.available()
+    with pytest.raises(RuntimeError, match="not writable"):
+        b.apply(200.0)
+    assert b.measure(Task("t", flops=1.0, hbm_bytes=1.0), 200.0) is None
+    # with a writable node it writes microwatts
+    node = tmp_path / "power1_cap"
+    node.write_text("0")
+    HwmonBackend(node=str(node)).apply(250.0)
+    assert node.read_text() == str(int(250.0 * 1e6))
+
+
+# ---------------------------------------------------------------------------
+# cap tolerance
+# ---------------------------------------------------------------------------
+
+def test_tasktable_at_tolerates_float_noise(table):
+    cap = table.caps()[0]
+    assert table.at("zgemm_ts64", cap + 1e-9) is table.at("zgemm_ts64", cap)
+    with pytest.raises(KeyError):
+        table.at("zgemm_ts64", cap + 1.0)
+
+
+def test_cap_schedule_transitions_tolerant():
+    sched = CapSchedule(caps={"a": 100.0, "b": 100.0 + 1e-9, "c": 200.0},
+                        default_cap=330.0)
+    assert sched.transitions(["a", "b", "c"]) == 1
+    assert caps_equal(100.0, 100.0 + 1e-9)
+    assert not caps_equal(100.0, 101.0)
+
+
+# ---------------------------------------------------------------------------
+# online session: observe -> refine -> re-decide
+# ---------------------------------------------------------------------------
+
+def test_observe_refines_table_ewma():
+    tbl = TaskTable([TaskMeasurement("t", 90.0, 1.0, 10.0),
+                     TaskMeasurement("t", 330.0, 1.0, 10.0)])
+    pm = PowerManager(tbl, ema_alpha=0.5)
+    pm.observe("t", runtime=3.0, energy=30.0, cap=90.0)
+    assert tbl.at("t", 90.0).runtime == pytest.approx(2.0)
+    assert tbl.at("t", 90.0).energy == pytest.approx(20.0)
+
+
+def test_online_redecide_converges_on_drifted_tasktable():
+    """Start from a profile that mis-characterizes the task (memory-bound),
+    feed ground-truth observations (compute-bound) with cap exploration:
+    the re-decided schedule must converge to the true table's decision."""
+    true = Task("t", flops=CHIP.peak_flops_bf16,
+                hbm_bytes=0.25 * CHIP.hbm_bandwidth)
+    stale = Task("t", flops=0.3 * CHIP.peak_flops_bf16,
+                 hbm_bytes=1.5 * CHIP.hbm_bandwidth)
+    truth = measure_sweep([true])
+    pm = PowerManager(measure_sweep([stale]), metric="sed",
+                      redecide_every=9, ema_alpha=0.8, explore_every=1)
+    stale_cap = pm.schedule.cap_for("t")
+    for _ in range(5 * len(SPEC.cap_sweep())):
+        cap = pm.next_cap("t")       # explore_every=1: round-robin probes
+        m = simulate_task(true, cap)
+        pm.observe("t", m.runtime, m.energy, cap=cap)
+    true_cap = sed_optimal_cap(truth, "t")
+    assert pm.schedule.cap_for("t") == true_cap
+    assert stale_cap != true_cap     # the drift was actually material
+
+
+def test_phase_records_history_and_feeds_observe():
+    tasks = paper_calibrated_tasks()
+    pm = PowerManager(tasks=tasks, redecide_every=100)
+    n_rows_before = len(pm.table.rows)
+    with pm.phase("buildKKRMatrix") as rec:
+        pass
+    assert rec.cap == pm.schedule.cap_for("buildKKRMatrix")
+    assert rec.modeled is not None and rec.modeled.energy > 0
+    assert pm.history[-1] is rec
+    assert len(pm.table.rows) == n_rows_before  # observed into existing row
+
+
+# ---------------------------------------------------------------------------
+# pod arbiter
+# ---------------------------------------------------------------------------
+
+def test_arbiter_grants_requests_when_budget_fits():
+    arb = PodPowerArbiter(budget_w=3 * SPEC.p_max)
+    req = {"a": 330.0, "b": 200.0, "c": 150.0}
+    assert arb.split(req) == req
+
+
+def test_arbiter_conserves_budget_when_oversubscribed():
+    arb = PodPowerArbiter(budget_w=600.0)
+    grants = arb.split({"a": 330.0, "b": 330.0, "c": 150.0})
+    assert sum(grants.values()) == pytest.approx(600.0)
+    assert all(g >= arb.floor - 1e-9 for g in grants.values())
+    # proportional above the floor: a and b stay equal, both above c
+    assert grants["a"] == pytest.approx(grants["b"])
+    assert grants["a"] > grants["c"]
+
+
+def test_arbiter_floor_wins_below_physical_minimum():
+    arb = PodPowerArbiter(budget_w=10.0)   # can't even idle two chips
+    grants = arb.split({"a": 330.0, "b": 330.0})
+    assert all(g == pytest.approx(arb.floor) for g in grants.values())
+
+
+def test_arbiter_split_phase_uses_schedules(table):
+    sched = PowerManager(table, metric="sed").schedule
+    arb = PodPowerArbiter(budget_w=2 * SPEC.p_max)
+    grants = arb.split_phase({"c0": sched, "c1": sched}, "zgemm_ts64")
+    assert grants["c0"] == grants["c1"] == sched.cap_for("zgemm_ts64")
+
+
+# ---------------------------------------------------------------------------
+# ledger parity (the rebuilt train-side view)
+# ---------------------------------------------------------------------------
+
+def test_phase_ledger_matches_manager_accounting():
+    from repro.train.phases import PhaseEnergyLedger
+    tasks = paper_calibrated_tasks()
+    pm = PowerManager(tasks=tasks, min_dwell_s=2e-4)
+    ledger = PhaseEnergyLedger(pm.schedule, tasks, min_dwell_s=2e-4)
+    assert ledger.account_step() == pm.account_step()
+    assert ledger.applied_caps() == pm.applied_caps()
+
+
+def test_phase_ledger_inherits_manager_dwell():
+    """Wrapping a live manager without min_dwell_s must not clobber the
+    manager's dwell setting."""
+    from repro.train.phases import PhaseEnergyLedger
+    tasks = paper_calibrated_tasks()
+    pm = PowerManager(tasks=tasks, min_dwell_s=2e-4)
+    ledger = PhaseEnergyLedger(pm, tasks)
+    assert pm.min_dwell_s == ledger.min_dwell_s == 2e-4
+    PhaseEnergyLedger(pm, tasks, min_dwell_s=5e-3)   # explicit: does set
+    assert pm.min_dwell_s == 5e-3

@@ -1,7 +1,11 @@
 """DVFS + power-steering model tests (the measurement substrate)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import NoiseModel, Task, measure_sweep, simulate_task
 from repro.hw import (DEFAULT_CHIP, DEFAULT_SUPERCHIP, WorkProfile,

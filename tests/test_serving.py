@@ -92,6 +92,47 @@ def test_serve_engine_generates():
     assert all(0 <= t < cfg.vocab for r in done for t in r.generated)
 
 
+def test_ragged_prompts_match_solo_generation():
+    """Regression: ragged batches used to left-pad, feeding pad tokens to
+    prefill (cache pollution) and sharing index=plen across slots (wrong
+    positions) — shorter prompts generated differently than when served
+    alone.  Batched output must equal per-request output exactly."""
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+    prompts = [[1, 2, 3], [4, 5, 6, 7, 8, 9, 10], [2, 4], [9, 8, 7, 6, 5]]
+
+    def fresh(bs):
+        return ServeEngine(cfg, run, ctx, params, batch_size=bs, max_seq=32)
+
+    batched = fresh(4).generate(
+        [Request(uid=i, prompt=list(p), max_new_tokens=4)
+         for i, p in enumerate(prompts)])
+    for i, p in enumerate(prompts):
+        solo = fresh(1).generate(
+            [Request(uid=i, prompt=list(p), max_new_tokens=4)])[0]
+        got = next(r for r in batched if r.uid == i)
+        assert got.generated == solo.generated, (i, p)
+
+
+def test_serve_engine_with_power_manager_phases():
+    """Prefill/decode run under distinct phase caps and the manager
+    records the session."""
+    from repro.power import PowerManager
+    from repro.serving.engine import serve_phase_tasks
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+    pm = PowerManager(tasks=serve_phase_tasks(
+        get_model_config("llama3.2-3b"), batch=128, prompt=32768,
+        new_tokens=8, chips=256))
+    engine = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=32,
+                         power=pm)
+    done = engine.generate([Request(uid=i, prompt=[1 + i, 2, 3],
+                                    max_new_tokens=3) for i in range(2)])
+    assert all(len(r.generated) == 3 for r in done)
+    names = {rec.name for rec in pm.history}
+    assert names == {"prefill", "decode"}
+    # compute-bound prefill keeps a higher cap than memory-bound decode
+    assert pm.schedule.cap_for("prefill") > pm.schedule.cap_for("decode")
+
+
 def test_encoder_only_has_no_cache():
     cfg, run, ctx, params = _setup("hubert-xlarge")
     with pytest.raises(ValueError):

@@ -10,7 +10,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.ckpt import checkpoint
 from repro.core import (CapSchedule, PowerSteeringController, SteeringGoal,
