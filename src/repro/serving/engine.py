@@ -142,20 +142,25 @@ class ServeEngine:
                 toks = jnp.pad(toks, ((0, padrows), (0, 0)))
             with self._phase("prefill"):
                 cache, logits = self.prefill(self.params, {"tokens": toks})
-            index = plen
+            # device-resident step index: incrementing on device avoids the
+            # per-token host->device upload that ``jnp.asarray(int)`` paid
+            index = jnp.asarray(plen, jnp.int32)
             cur = jnp.argmax(logits[:, 0], axis=-1)
             steps = max(r.max_new_tokens for r in active)
             for _ in range(steps):
+                # ONE device->host sync per step (int(cur[i]) per slot was
+                # B separate blocking transfers)
+                cur_host = jax.device_get(cur)
                 for i, r in enumerate(active):
                     if not r.done:
-                        r.generated.append(int(cur[i]))
+                        r.generated.append(int(cur_host[i]))
                 if all(r.done for r in active):
                     break
                 with self._phase("decode"):
                     cache, logits = self.decode(
                         self.params, cache, cur[:, None].astype(jnp.int32),
-                        jnp.asarray(index, jnp.int32))
+                        index)
                 cur = jnp.argmax(logits, axis=-1)
-                index += 1
+                index = index + 1
             done.extend(active)
         return done
