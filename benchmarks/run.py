@@ -7,8 +7,9 @@ import sys
 import traceback
 
 from benchmarks import (cell_caps, fig1_power_trace, fig2_sed_sweep,
-                        fig3_ed_sweep, roofline, steering_policy,
-                        table1_task_profile, table2_optimal_caps)
+                        fig3_ed_sweep, roofline, serving_throughput,
+                        steering_policy, table1_task_profile,
+                        table2_optimal_caps)
 
 BENCHES = [
     ("table1", table1_task_profile),
@@ -19,6 +20,7 @@ BENCHES = [
     ("steering", steering_policy),
     ("roofline", roofline),
     ("cell_caps", cell_caps),
+    ("serve", serving_throughput),
 ]
 
 

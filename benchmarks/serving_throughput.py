@@ -1,0 +1,157 @@
+"""Serving throughput under heavy mixed-prompt-length traffic.
+
+Runs the SAME request stream through the continuous-batching runtime
+(``repro.serving.engine.ServeEngine``) and the pre-rewrite static
+bucketed engine (``repro.serving.legacy.StaticServeEngine``) and reports,
+per engine:
+
+  * tokens/s       generated-token throughput (wall clock)
+  * J/token        modeled decode+prefill energy per generated token
+                   (PowerManager's analytic backend under per-phase caps)
+  * p50/p99 (s)    per-request completion latency (all requests arrive
+                   at t=0; completion is observed at chunk granularity)
+
+and the headline ``serve_speedup`` row.  Machine-readable results go to
+``BENCH_serve.json`` so the perf trajectory is tracked PR over PR; pass
+``--min-speedup`` (the CI smoke threshold) to fail loudly on regression.
+
+  PYTHONPATH=src:. python benchmarks/serving_throughput.py \
+      [--requests 24] [--min-speedup 1.5] [--json-path BENCH_serve.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.base import reduced
+from repro.configs.registry import get_model_config, get_run_config
+from repro.models import lm
+from repro.models.layers import Ctx
+from repro.models.params import init_params
+from repro.power import PowerManager
+from repro.serving.engine import Request, ServeEngine, serve_phase_tasks
+from repro.serving.legacy import StaticServeEngine
+from repro.sharding import RULE_SETS
+
+ARCH = "llama3.2-3b"
+MAX_SEQ = 64
+BATCH = 4
+DECODE_CHUNK = 8
+
+
+def _scenario(n_requests: int) -> list[tuple[list[int], int]]:
+    """Heavy mixed traffic: prompt lengths sweep 3..26 with (for the
+    default 24 requests) every length distinct — the realistic shape of
+    live traffic, and the case equal-length bucketing degrades to
+    batch-of-1.  New-token budgets sweep 8..23."""
+    out = []
+    for i in range(n_requests):
+        plen = 3 + (7 * i) % 24
+        new = 8 + (5 * i) % 16
+        prompt = [(3 * i + j) % 512 for j in range(plen)]
+        out.append((prompt, new))
+    return out
+
+
+def _requests(scenario) -> list[Request]:
+    return [Request(uid=i, prompt=list(p), max_new_tokens=n)
+            for i, (p, n) in enumerate(scenario)]
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    xs = sorted(xs)
+    i = min(len(xs) - 1, max(0, round(q * (len(xs) - 1))))
+    return xs[i]
+
+
+def _run_one(engine, scenario) -> dict:
+    reqs = _requests(scenario)
+    t0 = time.perf_counter()
+    done = engine.generate(reqs)
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(r.generated) for r in done)
+    assert n_tok == sum(n for _, n in scenario), "engine dropped tokens"
+    lat = [engine.completion_s[r.uid] for r in done]
+    pm = engine.power
+    # aggregate counter, not pm.history — history trims to its tail, which
+    # would silently undercount long runs
+    energy = pm.modeled_energy_j if pm is not None else 0.0
+    return {
+        "wall_s": wall,
+        "tokens": n_tok,
+        "tokens_per_s": n_tok / wall,
+        "j_per_token": energy / n_tok if n_tok else 0.0,
+        "p50_s": _percentile(lat, 0.50),
+        "p99_s": _percentile(lat, 0.99),
+    }
+
+
+def _build(kind: str, scenario):
+    cfg = reduced(get_model_config(ARCH))
+    run = get_run_config(ARCH, remat="none", logits_chunk=64)
+    ctx = Ctx(run, RULE_SETS[run.serve_rules_name], None)
+    params = init_params(lm.model_decls(cfg), jax.random.PRNGKey(0))
+    new_tokens = max(n for _, n in scenario)
+    pm = PowerManager(tasks=serve_phase_tasks(
+        get_model_config(ARCH), batch=128, prompt=32768,
+        new_tokens=new_tokens, chips=256))
+    if kind == "continuous":
+        eng = ServeEngine(cfg, run, ctx, params, batch_size=BATCH,
+                          max_seq=MAX_SEQ, power=pm,
+                          decode_chunk=DECODE_CHUNK)
+    else:
+        eng = StaticServeEngine(cfg, run, ctx, params, batch_size=BATCH,
+                                max_seq=MAX_SEQ, power=pm)
+    return eng
+
+
+def run(n_requests: int = 24, min_speedup: float | None = None,
+        json_path: str = "BENCH_serve.json") -> dict:
+    scenario = _scenario(n_requests)
+    results = {}
+    for kind in ("continuous", "legacy"):
+        # warmup on a tiny slice so jit tracing is off the clock for both
+        warm = _build(kind, scenario)
+        warm.generate(_requests(scenario[:2]))
+        eng = _build(kind, scenario)
+        results[kind] = _run_one(eng, scenario)
+    speedup = (results["continuous"]["tokens_per_s"]
+               / results["legacy"]["tokens_per_s"])
+    results["speedup"] = speedup
+    results["scenario"] = {"arch": ARCH, "requests": n_requests,
+                           "batch": BATCH, "max_seq": MAX_SEQ,
+                           "decode_chunk": DECODE_CHUNK}
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=1)
+    for kind in ("continuous", "legacy"):
+        r = results[kind]
+        emit(f"serve_{kind}", r["wall_s"] * 1e6,
+             f"{r['tokens_per_s']:.1f}tok/s|{r['j_per_token']:.2f}J/tok"
+             f"|p50={r['p50_s']:.2f}s|p99={r['p99_s']:.2f}s")
+    emit("serve_speedup", 0.0, f"{speedup:.2f}x")
+    if min_speedup is not None and speedup < min_speedup:
+        raise SystemExit(
+            f"serving throughput regression: continuous batching is only "
+            f"{speedup:.2f}x the static engine (threshold {min_speedup}x)")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="fail loudly when continuous/legacy tokens-per-s "
+                         "falls below this ratio (CI smoke threshold)")
+    ap.add_argument("--json-path", default="BENCH_serve.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.requests, args.min_speedup, args.json_path)
+
+
+if __name__ == "__main__":
+    main()

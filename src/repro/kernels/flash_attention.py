@@ -152,11 +152,15 @@ def flash_attention(q, k, v, *, causal=True, local_window=None, softcap=None,
 
 
 # ---------------------------------------------------------------------------
-# flash-decode: one new token against a long KV cache
+# flash-decode: a short query block (1..chunk new tokens) against a long KV
+# cache with a per-slot valid length — the serving runtime's decode step AND
+# its chunked-prefill attention (a prompt chunk prefilling into one slot
+# while other slots hold unrelated cache state).
 # ---------------------------------------------------------------------------
 
 def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
-                   acc_ref, *, scale, softcap, local_window, block_kv, nkv):
+                   acc_ref, *, scale, softcap, local_window, block_kv, nkv,
+                   sq, g):
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -170,17 +174,23 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
 
     @pl.when(k_start < kv_len)
     def _body():
-        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale    # (G, D)
+        # rows = sq * g: row r is query position kv_len - sq + r // g of
+        # group member r % g (the sq new tokens sit at the END of the
+        # valid kv window; causal within the chunk)
+        q = q_ref[0, :, :, :].astype(jnp.float32).reshape(
+            sq * g, q_ref.shape[-1]) * scale                 # (sq*g, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
-        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G,bkv)
+        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
         if softcap is not None:
             logits = softcap * jnp.tanh(logits / softcap)
         k_pos = k_start + jax.lax.broadcasted_iota(
             jnp.int32, logits.shape, 1)
-        mask = k_pos < kv_len
+        q_pos = kv_len - sq + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 0) // g
+        mask = k_pos <= q_pos
         if local_window is not None:
-            mask &= k_pos > kv_len - 1 - local_window
+            mask &= k_pos > q_pos - local_window
         logits = jnp.where(mask, logits, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, logits.max(axis=1))
@@ -193,7 +203,8 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
     @pl.when(ik == nkv - 1)
     def _finalize():
         denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
-        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+        o_ref[0, :, :, :] = (acc_ref[...] / denom).reshape(
+            o_ref.shape[1:]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -201,9 +212,11 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
 def flash_decode(q, k_cache, v_cache, kv_len, *, softcap=None,
                  local_window=None, scale=None, block_kv=1024,
                  interpret=False):
-    """q: (B, 1, H, D); caches: (B, S, K, D); kv_len: (B,) int32."""
+    """q: (B, Sq, H, D); caches: (B, S, K, D); kv_len: (B,) int32 valid
+    length INCLUDING the Sq new tokens, per slot (ragged).  Sq == 1 is the
+    classic flash-decode step; Sq > 1 is a chunked-prefill block laid at
+    the end of each slot's valid window (requires kv_len >= Sq)."""
     B, Sq, H, D = q.shape
-    assert Sq == 1, "flash_decode is single-token; use flash_attention"
     S, K = k_cache.shape[1], k_cache.shape[2]
     scale = scale if scale is not None else D ** -0.5
     block_kv = min(block_kv, max(S, 8))
@@ -211,30 +224,88 @@ def flash_decode(q, k_cache, v_cache, kv_len, *, softcap=None,
     vp = _pad_to(v_cache, 1, block_kv)
     nkv = kp.shape[1] // block_kv
     g = H // K
-    qg = q.reshape(B, K, g, D)      # group q by kv head
+    # group q rows by kv head: (B, K, Sq*g, D)
+    qg = q.reshape(B, Sq, K, g, D).transpose(0, 2, 1, 3, 4) \
+          .reshape(B, K, Sq * g, D)
 
     kernel = functools.partial(_decode_kernel, scale=scale, softcap=softcap,
                                local_window=local_window, block_kv=block_kv,
-                               nkv=nkv)
+                               nkv=nkv, sq=Sq, g=g)
     out = pl.pallas_call(
         kernel,
         grid=(B, K, nkv),
         in_specs=[
-            pl.BlockSpec((1, 1, g, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Sq * g, D), lambda b, h, ik: (b, h, 0, 0)),
             pl.BlockSpec((1, block_kv, 1, D), lambda b, h, ik: (b, ik, h, 0)),
             pl.BlockSpec((1, block_kv, 1, D), lambda b, h, ik: (b, ik, h, 0)),
             pl.BlockSpec((1,), lambda b, h, ik: (b,),
                          memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, ik: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, K, g, D), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, Sq * g, D),
+                               lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, Sq * g, D), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g, D), jnp.float32),
+            pltpu.VMEM((Sq * g,), jnp.float32),
+            pltpu.VMEM((Sq * g,), jnp.float32),
+            pltpu.VMEM((Sq * g, D), jnp.float32),
         ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qg, kp, vp, kv_len.astype(jnp.int32))
-    return out.reshape(B, 1, H, D)
+    return out.reshape(B, K, Sq, g, D).transpose(0, 2, 1, 3, 4) \
+              .reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# per-slot-offset KV cache write: each batch row lands its Sn new rows at its
+# own sequence offset (continuous batching: slots hold requests at different
+# positions).  A row whose write would cross the end of the cache is dropped
+# whole — the done-slot convention (index = max_seq) and the OOB guard.
+# ---------------------------------------------------------------------------
+
+def _cache_update_kernel(idx_ref, kn_ref, vn_ref, kc_ref, vc_ref,
+                         ko_ref, vo_ref, *, s_new, s_max):
+    idx = idx_ref[0]
+    ko_ref[...] = kc_ref[...]
+    vo_ref[...] = vc_ref[...]
+
+    @pl.when((idx >= 0) & (idx + s_new <= s_max))
+    def _write():
+        ko_ref[0, pl.dslice(idx, s_new), :, :] = \
+            kn_ref[0, :, :, :].astype(ko_ref.dtype)
+        vo_ref[0, pl.dslice(idx, s_new), :, :] = \
+            vn_ref[0, :, :, :].astype(vo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_update(k_cache, v_cache, k_new, v_new, index, *, interpret=False):
+    """Scatter k/v_new (B, Sn, K, D) into the caches (B, S, K, D) at
+    per-slot offsets ``index`` (B,) int32.  Rows with index + Sn > S are
+    dropped whole (done-slot semantics).  Returns (k_cache', v_cache')."""
+    B, Sn, K, D = k_new.shape
+    S = k_cache.shape[1]
+    kernel = functools.partial(_cache_update_kernel, s_new=Sn, s_max=S)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, Sn, K, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, Sn, K, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, K, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, K, D), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, K, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, K, D), lambda b: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(k_cache.shape, k_cache.dtype),
+            jax.ShapeDtypeStruct(v_cache.shape, v_cache.dtype),
+        ],
+        input_output_aliases={3: 0, 4: 1},
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(index.astype(jnp.int32), k_new, v_new, k_cache, v_cache)

@@ -39,7 +39,8 @@ def attention(q, k, v, *, causal=True, local_window=None, softcap=None,
 def decode_attention(q, k_cache, v_cache, kv_len, *, softcap=None,
                      local_window=None, scale=None, mode="reference",
                      block_kv=1024):
-    """One-token decode attention over a (B,S,K,D) cache."""
+    """Decode-step (Sq=1) or chunked-prefill (Sq>1) attention over a
+    (B,S,K,D) cache with per-slot valid lengths kv_len (B,)."""
     if mode in ("pallas", "pallas_interpret"):
         from repro.kernels import flash_attention
         return flash_attention.flash_decode(
@@ -49,6 +50,19 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, softcap=None,
     return ref.decode_attention_ref(q, k_cache, v_cache, kv_len,
                                     softcap=softcap,
                                     local_window=local_window, scale=scale)
+
+
+def kv_cache_update(k_cache, v_cache, k_new, v_new, index, *,
+                    mode="reference"):
+    """Write k/v_new (B,Sn,K,D) into the caches at per-slot offsets
+    ``index`` (B,); rows whose write would cross the cache end are dropped
+    whole (done-slot semantics).  Returns (k_cache', v_cache')."""
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import flash_attention
+        return flash_attention.cache_update(
+            k_cache, v_cache, k_new, v_new, index,
+            interpret=(mode == "pallas_interpret"))
+    return ref.kv_cache_update_ref(k_cache, v_cache, k_new, v_new, index)
 
 
 def ssd(x, dt, A, B, C, D=None, h0=None, *, chunk=128, mode="reference"):

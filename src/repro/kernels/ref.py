@@ -121,11 +121,27 @@ def attention_blockwise(q, k, v, *, causal=True, local_window=None,
 
 def decode_attention_ref(q, k_cache, v_cache, kv_len, *, scale=None,
                          softcap=None, local_window=None):
-    """Single-token decode oracle: q (B, 1, H, D), cache (B, S, K, D),
-    kv_len (B,) valid lengths INCLUDING the current token."""
+    """Decode/chunked-prefill oracle: q (B, Sq, H, D) laid at the END of
+    the valid kv window, cache (B, S, K, D), kv_len (B,) valid lengths
+    INCLUDING the Sq current tokens (per-slot ragged)."""
     return attention_naive(q, k_cache, v_cache, causal=True,
                            local_window=local_window, softcap=softcap,
                            scale=scale, kv_len=kv_len)
+
+
+def kv_cache_update_ref(k_cache, v_cache, k_new, v_new, index):
+    """Per-slot-offset cache write oracle: scatter k/v_new (B, Sn, K, D)
+    into (B, S, K, D) at row offsets ``index`` (B,).  A row whose write
+    would cross the cache end is dropped WHOLE (matching the Pallas
+    kernel's done-slot convention), not element-wise clipped."""
+    B, Sn = k_new.shape[:2]
+    S = k_cache.shape[1]
+    oob = (index < 0) | (index + Sn > S)
+    pos = jnp.where(oob[:, None], S, index[:, None] + jnp.arange(Sn)[None, :])
+    rows = jnp.arange(B)[:, None]
+    ck = k_cache.at[rows, pos].set(k_new.astype(k_cache.dtype), mode="drop")
+    cv = v_cache.at[rows, pos].set(v_new.astype(v_cache.dtype), mode="drop")
+    return ck, cv
 
 
 # ===========================================================================

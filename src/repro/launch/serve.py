@@ -12,6 +12,7 @@ after the batch drains.
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 
@@ -33,6 +34,11 @@ def main() -> None:
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="device-resident decode tokens per host sync AND "
+                         "per power-phase entry (chunk-amortized observe)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="max power-of-two prompt chunk per prefill step")
     ap.add_argument("--power-metric", default="sed",
                     choices=available_metrics())
     args = ap.parse_args()
@@ -57,15 +63,22 @@ def main() -> None:
           f"{ {k: round(v) for k, v in pm.schedule.caps.items()} }")
 
     engine = ServeEngine(cfg, run, ctx, params, batch_size=args.batch_size,
-                         max_seq=args.max_seq, power=pm)
+                         max_seq=args.max_seq, power=pm,
+                         prefill_chunk=args.prefill_chunk,
+                         decode_chunk=args.decode_chunk)
     reqs = [Request(uid=i, prompt=[(5 * i + j) % cfg.vocab
                                    for j in range(4 + i % 5)],
                     max_new_tokens=args.new)
             for i in range(args.requests)]
+    t0 = time.perf_counter()
     done = engine.generate(reqs)
+    wall = time.perf_counter() - t0
     for r in done:
         print(f"req {r.uid}: {len(r.generated)} tokens -> "
               f"{r.generated[:8]}{'...' if len(r.generated) > 8 else ''}")
+    n_tok = sum(len(r.generated) for r in done)
+    print(f"[throughput] {n_tok} tokens in {wall:.2f}s "
+          f"({n_tok / wall:.1f} tok/s, {engine.sync_count} host syncs)")
     e = pm.account_step()
     dt, de = pm.overhead_totals()
     print(f"[energy] modeled step {e['energy_j']:.1f}J "

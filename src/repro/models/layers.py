@@ -175,7 +175,8 @@ def apply_attention(ctx: Ctx, cfg: ModelConfig, p: dict, x, cos, sin, *,
 
     new_cache = None
     if cache is not None:
-        if _use_seqsharded_decode(ctx, cfg, x, cache):
+        per_slot = jnp.ndim(cache_index) >= 1
+        if not per_slot and _use_seqsharded_decode(ctx, cfg, x, cache):
             out, new_cache = _decode_attention_seqsharded(
                 ctx, cfg, q, cache, k, v, cache_index, scale=scale,
                 local_window=local_window)
@@ -183,10 +184,17 @@ def apply_attention(ctx: Ctx, cfg: ModelConfig, p: dict, x, cos, sin, *,
                            out.reshape(B, out.shape[1], H * hd),
                            p["wo"].astype(c))
             return ctx.cst(y, "act_batch", "act_seq", "act_embed"), new_cache
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, cache_index, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, cache_index, 0, 0))
+        if per_slot:
+            # continuous batching: every slot writes at its own offset
+            # (scattered cache write; OOB rows — done slots — dropped)
+            ck, cv = ops.kv_cache_update(cache["k"], cache["v"], k, v,
+                                         jnp.asarray(cache_index, jnp.int32),
+                                         mode=ctx.run.kernel_mode)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
         ck = ctx.cst(ck, "act_batch", "act_kv_seq", None, None)
         cv = ctx.cst(cv, "act_batch", "act_kv_seq", None, None)
         new_cache = {"k": ck, "v": cv}
@@ -646,9 +654,16 @@ def apply_mamba(ctx: Ctx, cfg: ModelConfig, p: dict, x, *,
         window = jnp.concatenate([conv_state, xbc], axis=1)     # (B, W, C)
         xbc = (window * conv_w[None]).sum(axis=1, keepdims=True) + conv_b
         new_conv_state = window[:, 1:]
+    elif conv_state is not None:
+        # prefill into a cache slot, possibly CONTINUING from an earlier
+        # chunk: the carried conv window is the true left context (a fresh
+        # slot carries zeros, which reproduces plain zero-padding), so the
+        # chunked prefill of the serving runtime is exact.  Also keeps the
+        # saved window well-shaped for chunks shorter than ssm_conv - 1.
+        window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        new_conv_state = window[:, -(cfg.ssm_conv - 1):]
+        xbc = _causal_conv(window, conv_w, conv_b)[:, cfg.ssm_conv - 1:]
     else:
-        if conv_state is not None:   # prefill into an existing cache slot
-            new_conv_state = xbc[:, -(cfg.ssm_conv - 1):]
         xbc = _causal_conv(xbc, conv_w, conv_b)
     xbc = jax.nn.silu(xbc)
 

@@ -198,7 +198,10 @@ def _scan_tf_layers(ctx: L.Ctx, cfg: ModelConfig, stack, h, cos, sin, *,
 def _positions_default(batch: int, seq: int, cache_index=None):
     pos = jnp.arange(seq, dtype=jnp.int32)[None, :]
     if cache_index is not None:
-        pos = pos + cache_index
+        idx = jnp.asarray(cache_index, jnp.int32)
+        # scalar index: shared decode offset; (B,) index: per-slot offsets
+        # (continuous batching — each slot is at its own position)
+        pos = pos + (idx[:, None] if idx.ndim == 1 else idx)
     return jnp.broadcast_to(pos, (batch, seq))
 
 
@@ -361,7 +364,8 @@ def _attention_with_qdelta(ctx, cfg, p, x, q_delta, cos, sin, *,
     from repro.kernels import ops
     new_cache = None
     if cache is not None:
-        if L._use_seqsharded_decode(ctx, cfg, x, cache):
+        per_slot = jnp.ndim(cache_index) >= 1
+        if not per_slot and L._use_seqsharded_decode(ctx, cfg, x, cache):
             out, new_cache = L._decode_attention_seqsharded(
                 ctx, cfg, q, cache, k, v, cache_index, scale=scale)
             y = jnp.einsum("bse,ed->bsd",
@@ -369,14 +373,21 @@ def _attention_with_qdelta(ctx, cfg, p, x, q_delta, cos, sin, *,
                                        cfg.n_heads * cfg.head_dim),
                            p["wo"].astype(c))
             return ctx.cst(y, "act_batch", "act_seq", "act_embed"), new_cache
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        if per_slot:
+            ck, cv = ops.kv_cache_update(
+                cache["k"], cache["v"], k, v,
+                jnp.asarray(cache_index, jnp.int32),
+                mode=ctx.run.kernel_mode)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
         ck = ctx.cst(ck, "act_batch", "act_kv_seq", None, None)
         cv = ctx.cst(cv, "act_batch", "act_kv_seq", None, None)
         new_cache = {"k": ck, "v": cv}
-        kv_len = jnp.full((x.shape[0],), cache_index + x.shape[1], jnp.int32)
+        kv_len = jnp.broadcast_to(
+            jnp.asarray(cache_index + x.shape[1], jnp.int32), (x.shape[0],))
         out = ops.decode_attention(q, ck.astype(c), cv.astype(c), kv_len,
                                    scale=scale, mode=ctx.run.kernel_mode,
                                    block_kv=ctx.run.attn_block_kv)

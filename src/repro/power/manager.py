@@ -149,6 +149,11 @@ class PowerManager:
         self.history_limit = history_limit
         self.history: list[PhaseRecord] = []
         self.transitions = 0
+        # aggregate modeled totals across ALL phase entries — unlike
+        # ``history`` these are never trimmed, so long sessions (one
+        # decode chunk per K served tokens) can report totals exactly
+        self.modeled_energy_j = 0.0
+        self.modeled_runtime_s = 0.0
         self._current_cap: float | None = None
         self._n_obs = 0
         self._visits: dict[str, int] = {}
@@ -260,7 +265,8 @@ class PowerManager:
         return True
 
     @contextlib.contextmanager
-    def phase(self, name: str) -> Iterator[PhaseRecord]:
+    def phase(self, name: str,
+              calls: int | None = None) -> Iterator[PhaseRecord]:
         """Run a named phase under its (possibly probed) cap:
 
             with pm.phase("attention"):
@@ -268,7 +274,16 @@ class PowerManager:
 
         Applies the cap on entry; on exit, records wall time and — when the
         backend can measure the registered Task — feeds the measurement to
-        ``observe()``, driving the adaptive loop."""
+        ``observe()``, driving the adaptive loop.
+
+        ``calls`` overrides the registered task's per-phase call count for
+        this entry: a serving runtime that enters ``phase("decode",
+        calls=K)`` once per K-token chunk amortizes the cap write, the
+        wall-clock reads and the EWMA/observe bookkeeping over K tokens
+        while the modeled measurement (``rec.modeled``) still accounts all
+        K calls.  The table observation is re-normalized to the registered
+        task's canonical call count so chunk-scale samples never blend
+        into rows measured at a different scale."""
         cap = self.next_cap(name)
         self.apply_cap(cap)
         rec = PhaseRecord(name=name, cap=cap)
@@ -278,11 +293,18 @@ class PowerManager:
         finally:
             rec.wall_s = time.perf_counter() - t0
             task = self.tasks.get(name)
-            m = self.backend.measure(task, cap) if task is not None else None
+            m = None
+            if task is not None:
+                eff = task if calls is None \
+                    else dataclasses.replace(task, calls=calls)
+                m = self.backend.measure(eff, cap)
             if m is not None:
                 rec.modeled = m
-                self.observe(name, m.runtime, m.energy, cap=cap,
-                             clock_fraction=m.clock_fraction)
+                self.modeled_energy_j += m.energy
+                self.modeled_runtime_s += m.runtime
+                scale = 1.0 if calls in (None, 0) else task.calls / calls
+                self.observe(name, m.runtime * scale, m.energy * scale,
+                             cap=cap, clock_fraction=m.clock_fraction)
             self.history.append(rec)
             # long-lived sessions (one decode phase per served token):
             # keep the tail only; aggregates live in self.transitions etc.

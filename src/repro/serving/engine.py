@@ -1,17 +1,37 @@
-"""Serving: prefill + decode steps and a batched request loop.
+"""Serving: continuous-batching runtime over per-slot cache state.
 
-Prefill runs the full-sequence forward while writing the KV/SSM caches in
-place (attention reads back through the cache, so prefill and decode share
-one code path); decode advances one token per call.  ``decode_*`` /
-``long_*`` dry-run cells lower ``make_decode_step``; ``prefill_*`` cells
-lower ``make_prefill_step``.
+Three device programs make up the runtime (all shapes fixed — no
+per-prompt-length retraces):
+
+  * ``make_prefill_chunk_step``: one power-of-two prompt chunk prefills
+    into ONE slot's cache rows (the slot is sliced out, run at batch=1,
+    scattered back), while every other slot's state is untouched.  A
+    prompt of any length is a ``chunk_plan`` of these.
+  * ``make_decode_chunk_step``: a device-resident ``lax.while_loop`` over
+    K decode steps for the WHOLE batch with a per-slot cache-index vector
+    ``(B,)`` and per-slot done flags — one host sync per K-token chunk
+    instead of one per token.  Finished (and empty) slots are masked by
+    the done flags: their writes drop (index = max_seq) and they emit no
+    tokens.
+  * an admission step that installs a freshly prefilled request into its
+    slot's lane of the running decode state.
+
+``make_prefill_step`` / ``make_decode_step`` remain the single-shot
+whole-batch programs (``decode_*`` / ``long_*`` dry-run cells lower
+``make_decode_step``; ``prefill_*`` cells lower ``make_prefill_step``).
+
+When a ``repro.power.PowerManager`` is attached, prefill and decode run
+under their own phase caps — the serving form of the paper's per-task
+capping (compute-bound prefill keeps a high cap, memory-bound decode a
+low one).  Phases are entered at CHUNK granularity: one ``phase("decode",
+calls=K)`` per K-token chunk amortizes the cap write, the wall-clock
+reads and the EWMA ``observe()`` over K tokens.
 """
 
 from __future__ import annotations
 
 import contextlib
-import dataclasses
-from typing import Any
+import time
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +40,11 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.core.tasks import Task
 from repro.models import lm
 from repro.models.layers import Ctx
+from repro.serving.scheduler import (Request, SlotScheduler, chunk_plan)
+
+__all__ = ["Request", "ServeEngine", "serve_phase_tasks",
+           "make_prefill_step", "make_decode_step",
+           "make_prefill_chunk_step", "make_decode_chunk_step"]
 
 
 def serve_phase_tasks(cfg: ModelConfig, batch: int, prompt: int,
@@ -41,6 +66,10 @@ def serve_phase_tasks(cfg: ModelConfig, batch: int, prompt: int,
              hbm_bytes=(2.0 * n + cache) / chips, calls=new_tokens),
     ]
 
+
+# ===========================================================================
+# single-shot whole-batch programs (dry-run cells, equivalence tests)
+# ===========================================================================
 
 def make_prefill_step(cfg: ModelConfig, run: RunConfig, ctx: Ctx,
                       max_seq: int):
@@ -79,88 +108,228 @@ def make_decode_step(cfg: ModelConfig, run: RunConfig, ctx: Ctx):
     return decode
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: list[int]
-    max_new_tokens: int
-    generated: list[int] = dataclasses.field(default_factory=list)
+# ===========================================================================
+# continuous-batching device programs
+# ===========================================================================
 
-    @property
-    def done(self) -> bool:
-        return len(self.generated) >= self.max_new_tokens
+def _slice_slot(tree, slot):
+    """One slot's lane of a stacked cache tree (batch axis = 1)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), tree)
+
+
+def _merge_slot(tree, sub, slot):
+    return jax.tree.map(
+        lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+            full, new.astype(full.dtype), slot, axis=1), tree, sub)
+
+
+def make_prefill_chunk_step(cfg: ModelConfig, run: RunConfig, ctx: Ctx):
+    """prefill_chunk(params, cache, tokens (1,chunk), slot (), index ())
+    -> (cache, logits (1,V)).
+
+    Writes the chunk's KV rows / SSM state into ONE slot of the shared
+    batch cache; every other slot is untouched, so the rest of the batch
+    can keep decoding between chunks.  Under jit this traces once per
+    chunk SIZE (a power of two from ``chunk_plan``), never per prompt
+    length."""
+
+    def prefill_chunk(params, cache, tokens, slot, index):
+        sub = _slice_slot(cache, slot)
+        h, _, sub = lm.forward(ctx, cfg, params, {"tokens": tokens},
+                               cache=sub, cache_index=index)
+        logits = lm.logits_for(ctx, cfg, params, h[:, -1:, :])
+        return _merge_slot(cache, sub, slot), logits[:, 0]
+
+    return prefill_chunk
+
+
+def make_decode_chunk_step(cfg: ModelConfig, run: RunConfig, ctx: Ctx,
+                           chunk: int, max_seq: int):
+    """decode_chunk(params, cache, cur, index, rem, done) ->
+    (cache, cur, index, rem, done, out (B,chunk), steps ()).
+
+    Device-resident ``lax.while_loop`` over up to ``chunk`` tokens with
+    per-slot state vectors (B,): ``cur`` is each slot's newest
+    not-yet-delivered token, ``index`` its cache write offset, ``rem``
+    tokens still owed, ``done`` the mask for finished/empty slots.  The
+    loop exits early when every slot is done.  ``out`` collects emitted
+    tokens (-1 where a slot was done) — the ONLY value the host needs per
+    chunk, so serving costs one device_get per chunk, not per token."""
+
+    def decode_chunk(params, cache, cur, index, rem, done):
+        B = cur.shape[0]
+        out0 = jnp.full((B, chunk), -1, jnp.int32)
+
+        def cond(st):
+            _, _, _, _, done, _, t = st
+            return (t < chunk) & ~jnp.all(done)
+
+        def body(st):
+            cache, cur, index, rem, done, out, t = st
+            # deliver each live slot's pending token into the out buffer
+            out = out.at[:, t].set(jnp.where(done, -1, cur))
+            rem = jnp.where(done, rem, rem - 1)
+            done = done | (rem <= 0)
+            # done slots write at max_seq: OOB rows are DROPPED by the
+            # per-slot cache scatter, so retired lanes cost no state
+            widx = jnp.where(done, max_seq, index)
+            h, _, cache = lm.forward(
+                ctx, cfg, params, {"tokens": cur[:, None]},
+                cache=cache, cache_index=widx)
+            logits = lm.logits_for(ctx, cfg, params, h)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            cur = jnp.where(done, 0, nxt)
+            index = jnp.where(done, index, index + 1)
+            return (cache, cur, index, rem, done, out, t + 1)
+
+        st = (cache, cur.astype(jnp.int32), index.astype(jnp.int32),
+              rem.astype(jnp.int32), done, out0, jnp.asarray(0, jnp.int32))
+        return jax.lax.while_loop(cond, body, st)
+
+    return decode_chunk
+
+
+def _admit_step(cur, index, rem, done, logits, slot, plen, max_new):
+    """Install a freshly prefilled request into its slot's decode lane:
+    first generated token from the prefill logits, cache offset at the
+    prompt length, token budget armed."""
+    first = jnp.argmax(logits[0]).astype(jnp.int32)
+    cur = cur.at[slot].set(first)
+    index = index.at[slot].set(plen)
+    rem = rem.at[slot].set(max_new)
+    done = done.at[slot].set(max_new <= 0)
+    return cur, index, rem, done
+
+
+def _reset_mamba_slot(cache, slot):
+    """Zero one slot's recurrent (SSM + conv) state before reuse: unlike
+    KV rows, which are masked by per-slot kv_len, Mamba state carries
+    unconditionally and would leak the previous request into the next."""
+    def zero_lane(a):
+        lane = jnp.zeros_like(jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1))
+        return jax.lax.dynamic_update_slice_in_dim(a, lane, slot, axis=1)
+    return dict(cache, mamba=jax.tree.map(zero_lane, cache["mamba"]))
 
 
 class ServeEngine:
-    """Minimal batched serving loop (greedy) over the decode step.
+    """Continuous-batching serving runtime (greedy decoding).
 
-    Demonstrates the production pattern: fixed-size running batch, per-slot
-    request swap-in on completion (continuous batching), one jitted decode.
+    ``batch_size`` device-resident slots each hold one in-flight request
+    at its own cache offset.  Admission happens at any step regardless of
+    prompt length (chunked per-slot prefill — no equal-length bucketing,
+    no per-length retrace); decode runs as a device-resident loop over
+    ``decode_chunk``-token chunks with ONE host sync per chunk; a slot is
+    recycled the moment its request finishes, at chunk granularity.
 
-    When a ``repro.power.PowerManager`` is attached, prefill and decode run
-    under their own phase caps (``pm.phase("prefill")`` /
-    ``pm.phase("decode")``) — the serving form of the paper's per-task
-    capping: compute-bound prefill keeps a high cap, memory-bound decode a
-    low one.
+    With a ``repro.power.PowerManager`` attached, prefill and decode run
+    under their own phase caps, entered once per admission round / decode
+    chunk (chunk-amortized ``observe()``).
     """
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, ctx: Ctx, params,
-                 batch_size: int = 4, max_seq: int = 256, power=None):
+                 batch_size: int = 4, max_seq: int = 256, power=None,
+                 prefill_chunk: int = 32, decode_chunk: int = 8):
+        if cfg.family == "audio":
+            raise ValueError("encoder-only arch has no decode path")
+        prefill_chunk = min(prefill_chunk, max_seq)
+        if prefill_chunk < 1 or prefill_chunk & (prefill_chunk - 1):
+            raise ValueError(f"prefill_chunk must be a power of two, "
+                             f"got {prefill_chunk}")
+        if decode_chunk < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
         self.cfg, self.run, self.ctx = cfg, run, ctx
         self.params = params
         self.batch_size, self.max_seq = batch_size, max_seq
         self.power = power   # Optional[repro.power.PowerManager]
-        self.prefill = jax.jit(make_prefill_step(cfg, run, ctx, max_seq))
-        self.decode = jax.jit(make_decode_step(cfg, run, ctx))
+        self.prefill_chunk = prefill_chunk
+        self.decode_chunk = decode_chunk
+        # jit caches one program per (1, chunk_size) token shape — the
+        # chunk_plan power-of-two sizes bound the trace count
+        self._prefill_step = jax.jit(make_prefill_chunk_step(cfg, run, ctx))
+        self._decode_fn = jax.jit(
+            make_decode_chunk_step(cfg, run, ctx, decode_chunk, max_seq))
+        self._admit_fn = jax.jit(_admit_step)
+        self._reset_fn = jax.jit(_reset_mamba_slot)
+        # transfer seam: tests swap this for a counting double to assert
+        # the one-sync-per-chunk contract
+        self._fetch = jax.device_get
+        self.sync_count = 0
+        self.completion_s: dict[int, float] = {}   # uid -> wall s in generate
 
-    def _phase(self, name: str):
-        return (self.power.phase(name) if self.power is not None
-                else contextlib.nullcontext())
+    # -- internals ---------------------------------------------------------
+    def _phase(self, name: str, calls: int | None = None):
+        if self.power is None:
+            return contextlib.nullcontext()
+        return self.power.phase(name, calls=calls)
 
-    def _take_batch(self, pending: list[Request]) -> list[Request]:
-        """Next batch of equal-prompt-length requests.  Ragged batches used
-        to be left-padded, which fed pad tokens to prefill as real tokens
-        (KV-cache and SSM-state pollution) and shared one ``index = plen``
-        across slots (wrong positions for shorter prompts).  Equal-length
-        bucketing removes both failure modes for every model family; a
-        production engine would chunk prefill per slot instead."""
-        plen = len(pending[0].prompt)
-        return [r for r in pending
-                if len(r.prompt) == plen][:self.batch_size]
+    def _prefill_into_slot(self, cache, req: Request, sid: int):
+        """Chunked prefill of one request into slot ``sid``; returns the
+        updated cache and the last-token logits (1, V)."""
+        if "mamba" in cache:    # recurrent state carries across requests
+            cache = self._reset_fn(cache, sid)
+        idx, logits = 0, None
+        for size in chunk_plan(len(req.prompt), self.prefill_chunk):
+            toks = jnp.asarray([req.prompt[idx:idx + size]], jnp.int32)
+            cache, logits = self._prefill_step(
+                self.params, cache, toks, sid, idx)
+            idx += size
+        return cache, logits
 
+    # -- serving loop ------------------------------------------------------
     def generate(self, requests: list[Request]) -> list[Request]:
-        pending = sorted(requests, key=lambda r: len(r.prompt))
-        done: list[Request] = []
-        while pending:
-            active = self._take_batch(pending)
-            taken = {id(r) for r in active}
-            pending = [r for r in pending if id(r) not in taken]
-            plen = len(active[0].prompt)   # per-slot length, uniform batch
-            toks = jnp.array([r.prompt for r in active], dtype=jnp.int32)
-            if len(active) < self.batch_size:
-                padrows = self.batch_size - len(active)
-                toks = jnp.pad(toks, ((0, padrows), (0, 0)))
-            with self._phase("prefill"):
-                cache, logits = self.prefill(self.params, {"tokens": toks})
-            # device-resident step index: incrementing on device avoids the
-            # per-token host->device upload that ``jnp.asarray(int)`` paid
-            index = jnp.asarray(plen, jnp.int32)
-            cur = jnp.argmax(logits[:, 0], axis=-1)
-            steps = max(r.max_new_tokens for r in active)
-            for _ in range(steps):
-                # ONE device->host sync per step (int(cur[i]) per slot was
-                # B separate blocking transfers)
-                cur_host = jax.device_get(cur)
-                for i, r in enumerate(active):
-                    if not r.done:
-                        r.generated.append(int(cur_host[i]))
-                if all(r.done for r in active):
-                    break
-                with self._phase("decode"):
-                    cache, logits = self.decode(
-                        self.params, cache, cur[:, None].astype(jnp.int32),
-                        index)
-                cur = jnp.argmax(logits, axis=-1)
-                index = index + 1
-            done.extend(active)
-        return done
+        # validate up front: one oversize request must not abort the call
+        # after other requests already burned device work
+        for req in requests:
+            if len(req.prompt) + req.max_new_tokens > self.max_seq:
+                raise ValueError(
+                    f"request {req.uid}: prompt {len(req.prompt)} + "
+                    f"max_new_tokens {req.max_new_tokens} exceeds "
+                    f"max_seq {self.max_seq}")
+        t0 = time.perf_counter()
+        sched = SlotScheduler(self.batch_size)
+        sched.submit(requests)
+        B = self.batch_size
+        cache = lm.init_cache(self.ctx, self.cfg, B, self.max_seq)
+        cur = jnp.zeros((B,), jnp.int32)
+        index = jnp.zeros((B,), jnp.int32)
+        rem = jnp.zeros((B,), jnp.int32)
+        done = jnp.ones((B,), bool)
+        finished: list[Request] = []
+
+        while sched.has_work:
+            # one phase entry per admitted request = one prefill program
+            # run under the prefill cap (back-to-back entries coalesce the
+            # cap write; the modeled measurement accounts each prefill)
+            for slot in sched.admit_ready():
+                with self._phase("prefill"):
+                    cache, logits = self._prefill_into_slot(
+                        cache, slot.request, slot.sid)
+                cur, index, rem, done = self._admit_fn(
+                    cur, index, rem, done, logits, slot.sid,
+                    len(slot.request.prompt), slot.request.max_new_tokens)
+            with self._phase("decode", calls=self.decode_chunk):
+                cache, cur, index, rem, done, out, _ = self._decode_fn(
+                    self.params, cache, cur, index, rem, done)
+            out_host = self._fetch(out)           # the chunk's ONE sync
+            self.sync_count += 1
+            now = time.perf_counter() - t0
+            for slot in sched.active():
+                row = out_host[slot.sid]
+                fresh = [int(t) for t in row[:_valid_len(row)]]
+                slot.request.generated.extend(fresh)
+                slot.emitted += len(fresh)
+                if slot.emitted >= slot.request.max_new_tokens:
+                    self.completion_s[slot.request.uid] = now
+                    finished.append(sched.release(slot))
+        return finished
+
+
+def _valid_len(row) -> int:
+    """Emitted tokens are a -1-terminated prefix of the chunk buffer."""
+    n = 0
+    for t in row:
+        if t < 0:
+            break
+        n += 1
+    return n

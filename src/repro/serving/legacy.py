@@ -1,0 +1,97 @@
+"""The pre-continuous-batching serving loop, kept as the benchmark baseline.
+
+``StaticServeEngine`` is the engine this repo shipped before the
+continuous-batching runtime (minus its per-token host round-trips, which
+were fixed separately so the benchmark delta is attributable to the
+scheduler, not to transfer hygiene).  Its restrictions are the ones the
+rewrite removes:
+
+  * equal-prompt-length bucketing (one jit retrace per distinct length,
+    sub-full batches whenever lengths are ragged),
+  * one host sync per generated token (the step loop is host-driven),
+  * finished requests hostage to the longest request in their batch —
+    slots only recycle when the WHOLE batch drains.
+
+``benchmarks/serving_throughput.py`` runs both engines on the same
+mixed-prompt-length traffic; new code should use
+``repro.serving.engine.ServeEngine``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.layers import Ctx
+from repro.serving.scheduler import Request
+
+
+class StaticServeEngine:
+    """Batched serving loop with equal-prompt-length bucketing (greedy)."""
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, ctx: Ctx, params,
+                 batch_size: int = 4, max_seq: int = 256, power=None):
+        from repro.serving.engine import make_decode_step, make_prefill_step
+        self.cfg, self.run, self.ctx = cfg, run, ctx
+        self.params = params
+        self.batch_size, self.max_seq = batch_size, max_seq
+        self.power = power   # Optional[repro.power.PowerManager]
+        self.prefill = jax.jit(make_prefill_step(cfg, run, ctx, max_seq))
+        self.decode = jax.jit(make_decode_step(cfg, run, ctx))
+        self.completion_s: dict[int, float] = {}   # uid -> wall s in generate
+
+    def _phase(self, name: str, calls: int | None = None):
+        return (self.power.phase(name, calls=calls)
+                if self.power is not None else contextlib.nullcontext())
+
+    def _take_batch(self, pending: list[Request]) -> list[Request]:
+        """Next batch of equal-prompt-length requests: ragged batches
+        would feed pad tokens to prefill (KV/SSM pollution) and share one
+        ``index = plen`` across slots."""
+        plen = len(pending[0].prompt)
+        return [r for r in pending
+                if len(r.prompt) == plen][:self.batch_size]
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        t0 = time.perf_counter()
+        pending = sorted(requests, key=lambda r: len(r.prompt))
+        done: list[Request] = []
+        while pending:
+            active = self._take_batch(pending)
+            taken = {id(r) for r in active}
+            pending = [r for r in pending if id(r) not in taken]
+            plen = len(active[0].prompt)   # per-slot length, uniform batch
+            toks = jnp.array([r.prompt for r in active], dtype=jnp.int32)
+            if len(active) < self.batch_size:
+                padrows = self.batch_size - len(active)
+                toks = jnp.pad(toks, ((0, padrows), (0, 0)))
+            with self._phase("prefill"):
+                cache, logits = self.prefill(self.params, {"tokens": toks})
+            index = jnp.asarray(plen, jnp.int32)
+            cur = jnp.argmax(logits[:, 0], axis=-1)
+            steps = max(r.max_new_tokens for r in active)
+            for _ in range(steps):
+                cur_host = jax.device_get(cur)   # one sync per token step
+                for i, r in enumerate(active):
+                    if not r.done:
+                        r.generated.append(int(cur_host[i]))
+                if all(r.done for r in active):
+                    break
+                # one phase entry per token, accounting ONE decode call —
+                # the per-token cost this engine actually pays (the
+                # registered task's calls covers a whole response)
+                with self._phase("decode", calls=1):
+                    cache, logits = self.decode(
+                        self.params, cache, cur[:, None].astype(jnp.int32),
+                        index)
+                cur = jnp.argmax(logits, axis=-1)
+                index = index + 1
+            now = time.perf_counter() - t0
+            for r in active:
+                self.completion_s[r.uid] = now
+            done.extend(active)
+        return done

@@ -1,0 +1,109 @@
+"""Slot scheduler for the continuous-batching serving runtime.
+
+Host-side bookkeeping only — no device state lives here.  The engine owns
+one fixed-size batch of ``n_slots`` device-resident cache slots; this
+module decides which request occupies which slot and when:
+
+  * admission at ANY step regardless of prompt length (no equal-length
+    bucketing — each slot prefills at its own offset into its own rows),
+  * immediate slot recycling the moment a request finishes (the engine
+    observes completions once per decode chunk), and
+  * FCFS queueing beyond the slot count.
+
+``chunk_plan`` decomposes a prompt length into power-of-two prefill
+chunks (largest-first), so any mix of prompt lengths compiles at most
+``log2(max_chunk) + 1`` distinct prefill programs — killing the
+per-prompt-length retrace of the bucketed engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class Slot:
+    """One running-batch lane: its request (None = free) and progress."""
+
+    sid: int
+    request: Request | None = None
+    emitted: int = 0          # tokens delivered to the request so far
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+def chunk_plan(length: int, max_chunk: int) -> list[int]:
+    """Power-of-two chunk decomposition of ``length``, largest-first
+    (e.g. 13 with max_chunk=8 -> [8, 4, 1]).  Every chunk size is drawn
+    from {max_chunk, max_chunk/2, ..., 1}, so the number of distinct
+    prefill traces is bounded by the set size, not by how many distinct
+    prompt lengths the traffic contains."""
+    if length <= 0:
+        raise ValueError(f"cannot chunk a length-{length} prompt")
+    if max_chunk < 1 or max_chunk & (max_chunk - 1):
+        raise ValueError(f"max_chunk must be a power of two, got {max_chunk}")
+    plan, c, rem = [], max_chunk, length
+    while rem:
+        while c > rem:
+            c //= 2
+        plan.append(c)
+        rem -= c
+    return plan
+
+
+class SlotScheduler:
+    """Maps queued requests onto a fixed set of batch slots, FCFS."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.slots = [Slot(i) for i in range(n_slots)]
+        self.queue: deque[Request] = deque()
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, requests) -> None:
+        self.queue.extend(requests)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(not s.free for s in self.slots)
+
+    # -- slots -------------------------------------------------------------
+    def active(self) -> list[Slot]:
+        return [s for s in self.slots if not s.free]
+
+    def admit_ready(self) -> list[Slot]:
+        """Fill free slots from the queue (FCFS); returns the slots
+        admitted this round.  Callable at any step — admission never
+        waits for the rest of the batch."""
+        admitted = []
+        free = (s for s in self.slots if s.free)
+        for slot in free:
+            if not self.queue:
+                break
+            slot.request = self.queue.popleft()
+            slot.emitted = 0
+            admitted.append(slot)
+        return admitted
+
+    def release(self, slot: Slot) -> Request:
+        """Finish a slot's request and free the slot for recycling."""
+        req, slot.request, slot.emitted = slot.request, None, 0
+        if req is None:
+            raise ValueError(f"slot {slot.sid} is already free")
+        return req

@@ -36,6 +36,10 @@ class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
         return _Strategy(lambda rng: rng.uniform(min_value, max_value))
 
     @staticmethod
+    def integers(min_value: int, max_value: int, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
     def tuples(*strats: _Strategy) -> _Strategy:
         return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
 

@@ -7,9 +7,15 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention, flash_decode
+from repro.kernels.flash_attention import (cache_update, flash_attention,
+                                           flash_decode)
 from repro.kernels.grouped_matmul import grouped_matmul
 from repro.kernels.ssd import ssd
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # container fallback
+    from _hypothesis_fallback import given, settings, st
 
 KEY = jax.random.PRNGKey(0)
 
@@ -88,6 +94,54 @@ def test_flash_decode(lens, dtype):
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(out.astype(jnp.float32),
                                exp.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("lens,Sq", [([5, 33, 64], 5), ([7, 12, 20], 4)])
+@pytest.mark.parametrize("window", [None, 8])
+def test_flash_decode_chunked_prefill(lens, Sq, window):
+    """Sq > 1: a prompt chunk laid at the end of each slot's ragged kv
+    window (the continuous-batching chunked-prefill attention)."""
+    B, S, H, K, D = len(lens), 64, 4, 2, 32
+    q, k, v = _qkv(B, Sq, H, K, D, jnp.float32, Sk=S)
+    kv_len = jnp.array(lens, jnp.int32)
+    out = flash_decode(q, k, v, kv_len, local_window=window, block_kv=16,
+                       interpret=True)
+    exp = ref.decode_attention_ref(q, k, v, kv_len, local_window=window)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 48), min_size=1, max_size=4),
+       st.integers(1, 6))
+def test_flash_decode_ragged_kv_len_property(raw_lens, Sq):
+    """Property: for ANY per-slot ragged kv_len vector and chunk size,
+    flash_decode matches the oracle (hypothesis, or the deterministic
+    fallback when hypothesis is not installed)."""
+    S, H, K, D = 48, 4, 2, 16
+    B = len(raw_lens)
+    kv_len = jnp.array([max(Sq, l) for l in raw_lens], jnp.int32)
+    q, k, v = _qkv(B, Sq, H, K, D, jnp.float32, Sk=S)
+    out = flash_decode(q, k, v, kv_len, block_kv=16, interpret=True)
+    exp = ref.decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("idx", [[0, 30, 60], [0, 61, 5], [64, 2, 7]])
+def test_cache_update_per_slot_offsets(idx):
+    """Per-slot-offset KV write: each row lands at its own offset; rows
+    whose write would cross the cache end are dropped whole (done-slot
+    semantics), identically in the kernel and the jnp reference."""
+    B, S, Sn, K, D = 3, 64, 4, 2, 16
+    ks = jax.random.split(KEY, 4)
+    kc = jax.random.normal(ks[0], (B, S, K, D))
+    vc = jax.random.normal(ks[1], (B, S, K, D))
+    kn = jax.random.normal(ks[2], (B, Sn, K, D))
+    vn = jax.random.normal(ks[3], (B, Sn, K, D))
+    index = jnp.array(idx, jnp.int32)
+    got_k, got_v = cache_update(kc, vc, kn, vn, index, interpret=True)
+    exp_k, exp_v = ref.kv_cache_update_ref(kc, vc, kn, vn, index)
+    np.testing.assert_array_equal(got_k, exp_k)
+    np.testing.assert_array_equal(got_v, exp_v)
 
 
 SSD_SHAPES = [
