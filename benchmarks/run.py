@@ -7,9 +7,9 @@ import sys
 import traceback
 
 from benchmarks import (cell_caps, fig1_power_trace, fig2_sed_sweep,
-                        fig3_ed_sweep, roofline, serving_throughput,
-                        steering_policy, table1_task_profile,
-                        table2_optimal_caps)
+                        fig3_ed_sweep, fleet_power, roofline,
+                        serving_throughput, steering_policy,
+                        table1_task_profile, table2_optimal_caps)
 
 BENCHES = [
     ("table1", table1_task_profile),
@@ -21,6 +21,7 @@ BENCHES = [
     ("roofline", roofline),
     ("cell_caps", cell_caps),
     ("serve", serving_throughput),
+    ("fleet", fleet_power),
 ]
 
 

@@ -7,11 +7,12 @@
   metrics.py      speedup-energy-delay, Euclidean-distance, GPS-UP (pure
                   functions; the pluggable Metric registry lives in
                   ``repro.power.metrics``)
-  steering.py     DEPRECATED shim — cap selection and the runtime session
-                  API moved to ``repro.power`` (PowerManager, CapBackend,
-                  PodPowerArbiter); the old names resolve lazily below so
-                  existing imports keep working
   trace.py        5 ms synthetic power trace (paper Fig. 1)
+
+The cap-selection/session stack lives in ``repro.power`` (PowerManager,
+CapBackend, weighted_split/PodPowerArbiter) and the fleet layer above it
+in ``repro.fleet``; the old ``core.steering`` shim is retired — importing
+it (or its names from here) raises with a pointer to ``repro.power``.
 """
 
 from repro.core.tasks import (Task, TaskMeasurement, TaskTable,
@@ -24,12 +25,6 @@ from repro.core.metrics import (speedup_energy_delay, sed_optimal_cap,
                                 weighted_application_impact)
 from repro.core.trace import generate_trace, PowerTrace, TracePoint
 
-# Steering names are provided lazily (PEP 562): resolving them imports
-# repro.power, and doing that on first use instead of at package import
-# keeps repro.core <-> repro.power import-order independent.
-_STEERING_NAMES = ("PowerSteeringController", "SteeringGoal", "CapSchedule",
-                   "CapDecision")
-
 __all__ = [
     "Task", "TaskMeasurement", "TaskTable", "CAP_TOLERANCE_W", "caps_equal",
     "NoiseModel", "measure_sweep", "simulate_task",
@@ -37,13 +32,18 @@ __all__ = [
     "euclidean_distance", "ed_optimal_cap", "ed_argmin_is_pareto",
     "gps_up", "GpsUp", "table2", "aggregate_table2", "Table2Row",
     "weighted_application_impact",
-    "PowerSteeringController", "SteeringGoal", "CapSchedule", "CapDecision",
     "generate_trace", "PowerTrace", "TracePoint",
 ]
 
+# The retired steering names get a pointer, not a silent AttributeError.
+_MOVED = ("PowerSteeringController", "SteeringGoal", "CapSchedule",
+          "CapDecision")
+
 
 def __getattr__(name):
-    if name in _STEERING_NAMES:
-        from repro.core import steering
-        return getattr(steering, name)
+    if name in _MOVED:
+        raise AttributeError(
+            f"repro.core.{name} was removed: the steering stack moved to "
+            f"repro.power — use repro.power.PowerManager / PowerGoal / "
+            f"CapSchedule / CapDecision (see docs/power_api.md)")
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,42 +1,16 @@
-"""DEPRECATED shim — the steering stack moved to ``repro.power``.
+"""REMOVED — the steering stack lives in ``repro.power``.
 
-Everything importable from here keeps working:
-
-  * ``SteeringGoal`` / ``CapSchedule`` / ``CapDecision`` are the same
-    classes now defined in ``repro.power.manager`` (re-exported, so
-    isinstance checks hold across old and new import paths), and
-  * ``PowerSteeringController`` is a thin wrapper over
-    ``repro.power.PowerManager`` — new code should construct a
-    ``PowerManager`` directly and use its ``schedule`` / ``phase()`` /
-    ``observe()`` session API.
+This module spent one release as a deprecation shim (re-exporting
+``SteeringGoal``/``CapSchedule``/``CapDecision`` and wrapping
+``PowerSteeringController`` over ``PowerManager``); the remaining
+importers have been rewired, so importing it is now a hard error with a
+pointer.  This file itself disappears next release.
 """
 
-from __future__ import annotations
-
-import warnings
-
-from repro.hw.tpu import DEFAULT_SUPERCHIP, SuperchipSpec
-from repro.power.manager import (CapDecision, CapSchedule, PowerGoal,
-                                 PowerManager, SteeringGoal)
-from repro.core.tasks import TaskTable
-
-__all__ = ["PowerSteeringController", "SteeringGoal", "PowerGoal",
-           "CapSchedule", "CapDecision"]
-
-
-class PowerSteeringController:
-    """Deprecated offline controller; delegates to ``PowerManager``."""
-
-    def __init__(self, spec: SuperchipSpec = DEFAULT_SUPERCHIP):
-        warnings.warn(
-            "PowerSteeringController is deprecated; use "
-            "repro.power.PowerManager", DeprecationWarning, stacklevel=2)
-        self.spec = spec
-
-    def decide(self, table: TaskTable,
-               goal: SteeringGoal = SteeringGoal()) -> list[CapDecision]:
-        return PowerManager(table, goal=goal, spec=self.spec).decide()
-
-    def schedule(self, table: TaskTable,
-                 goal: SteeringGoal = SteeringGoal()) -> CapSchedule:
-        return PowerManager(table, goal=goal, spec=self.spec).schedule
+raise ImportError(
+    "repro.core.steering was removed: the steering stack moved to "
+    "repro.power. Use repro.power.PowerManager (with PowerGoal, "
+    "CapSchedule, CapDecision) — PowerSteeringController(spec)"
+    ".decide(table, goal) is PowerManager(table, goal=goal, spec=spec)"
+    ".decide(), and .schedule(table, goal) is the manager's .schedule "
+    "attribute. See docs/power_api.md for the migration table.")

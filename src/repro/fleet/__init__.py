@@ -1,0 +1,49 @@
+"""``repro.fleet`` — fleet-scale power orchestration.
+
+The layer above ``repro.power``: where a ``PowerManager`` steers one
+superchip's per-phase caps, the fleet steers one FACILITY budget across a
+simulated multi-node, multi-job cluster —
+
+  cluster.py     SimulatedCluster / FleetNode / VirtualClock / BudgetTrace:
+                 N nodes, each owning a real PowerManager + SimulatedBackend,
+                 stepped on a shared virtual clock (deterministic)
+  controller.py  FleetPowerController: hierarchical facility -> cabinet ->
+                 node -> phase budget arbitration, redistributing watts by
+                 each node's reported marginal-perf-per-watt sensitivity
+                 (built on repro.power.weighted_split)
+  scheduler.py   Job protocol + TrainJob / ServeJob + FleetScheduler:
+                 power-aware placement, preemption (train checkpoints
+                 first) and backoff-gated resume via StepwiseSupervisor
+  telemetry.py   FleetTelemetry: per-node samples -> fleet counters
+                 (tokens, joules, grants, violations) for the re-decide
+                 loop and BENCH_fleet.json
+
+Quick start::
+
+    from repro.fleet import SimulatedCluster, TrainJob, ServeJob
+    cluster = SimulatedCluster(n_nodes=6, policy="sensitivity")
+    counters = cluster.run(
+        jobs=[TrainJob("t0", cfg, batch=8, seq=512, total_steps=10_000),
+              ServeJob("s0", cfg, batch=64, prompt=2048, new_tokens=256,
+                       total_requests=100_000)],
+        budget=[(0.0, 1980.0), (30.0, 1100.0)],   # shrinking facility cap
+        until_s=60.0)
+    print(counters["tokens_per_s"], counters["j_per_token"])
+
+``benchmarks/fleet_power.py`` runs the headline scenario (sensitivity
+steering vs static even split at equal budget); ``docs/fleet.md`` has the
+hierarchy diagram and design notes.
+"""
+
+from repro.fleet.cluster import (BudgetTrace, FleetNode, SimulatedCluster,
+                                 VirtualClock)
+from repro.fleet.controller import FleetAllocation, FleetPowerController
+from repro.fleet.scheduler import (FleetScheduler, Job, ServeJob, TrainJob)
+from repro.fleet.telemetry import FleetTelemetry, NodeSample
+
+__all__ = [
+    "BudgetTrace", "FleetNode", "SimulatedCluster", "VirtualClock",
+    "FleetAllocation", "FleetPowerController",
+    "FleetScheduler", "Job", "ServeJob", "TrainJob",
+    "FleetTelemetry", "NodeSample",
+]

@@ -1,0 +1,312 @@
+"""A simulated multi-node cluster under one facility power budget.
+
+Each ``FleetNode`` owns a REAL ``repro.power`` session — a
+``SimulatedBackend`` (the analytic DVFS/steering model standing in for
+hardware telemetry) and a ``PowerManager`` swept over its assigned job's
+phase tasks — so per-phase cap selection, write coalescing, EWMA
+``observe()`` refinement and transition pricing are the production code
+paths, not a parallel implementation.  The fleet grant arrives through
+``PowerManager.set_grant``: the node's schedule still *requests* its
+per-phase caps, the grant ceilings what gets applied.
+
+Time is virtual: a shared ``VirtualClock`` advances in control quanta;
+within a quantum every busy node executes whole job steps whose duration
+is the MODELED phase runtime (plus cap-transition overhead).  No wall
+clock and no randomness enters the simulation, so two runs over the same
+job queue and budget trace produce bit-identical fleet counters — the
+seed-stability contract ``tests/test_fleet.py`` asserts.
+
+An idle node is power-gated (grant 0, no draw): preempting a job under a
+shrinking facility envelope genuinely returns its floor watts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from repro.fleet.controller import FleetPowerController
+from repro.fleet.scheduler import FleetScheduler, Job
+from repro.fleet.telemetry import FleetTelemetry, NodeSample
+from repro.hw.tpu import DEFAULT_SUPERCHIP, SuperchipSpec
+from repro.power.backends import SimulatedBackend
+from repro.power.manager import PowerManager
+
+#: Watts above the physical floor a node must be grantable before the
+#: scheduler will place work on it (a floor-pinned node does no useful
+#: work, it just idles hot).
+USEFUL_MARGIN_W = 30.0
+
+
+@dataclasses.dataclass
+class VirtualClock:
+    """The cluster's shared notion of time (seconds, virtual)."""
+
+    now: float = 0.0
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self.now += dt
+        return self.now
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetTrace:
+    """Facility budget over virtual time: step function through sorted
+    ``(t_start, watts)`` breakpoints (the shrinking-cap scenarios)."""
+
+    points: tuple
+
+    @classmethod
+    def of(cls, spec) -> "BudgetTrace":
+        """Coerce a constant, a list of breakpoints, or a trace."""
+        if isinstance(spec, BudgetTrace):
+            return spec
+        if isinstance(spec, (int, float)):
+            return cls(points=((0.0, float(spec)),))
+        pts = tuple(sorted((float(t), float(w)) for t, w in spec))
+        if not pts:
+            raise ValueError("empty budget trace")
+        return cls(points=pts)
+
+    def at(self, t: float) -> float:
+        w = self.points[0][1]
+        for t0, w0 in self.points:
+            if t0 > t:
+                break
+            w = w0
+        return w
+
+
+class FleetNode:
+    """One superchip node: a power session plus (at most) one job."""
+
+    def __init__(self, name: str, cabinet: str,
+                 spec: SuperchipSpec = DEFAULT_SUPERCHIP,
+                 metric: str = "sed"):
+        self.name = name
+        self.cabinet = cabinet
+        self.spec = spec
+        self.metric = metric
+        self.backend = SimulatedBackend(spec)
+        self.pm: PowerManager | None = None
+        self.job: Job | None = None
+        self.grant_w = 0.0
+        self.local_t = 0.0
+        self.assigned_at = 0.0
+        self._tasks: dict[str, object] = {}
+
+    # -- capacity constants -------------------------------------------------
+    @property
+    def floor_w(self) -> float:
+        return self.spec.p_floor
+
+    @property
+    def ceil_w(self) -> float:
+        return self.spec.p_max
+
+    @property
+    def busy(self) -> bool:
+        return self.job is not None
+
+    # -- job lifecycle ------------------------------------------------------
+    def assign(self, job: Job, t: float) -> None:
+        if self.job is not None:
+            raise RuntimeError(f"{self.name} already runs {self.job.name}")
+        self.job = job
+        tasks = job.phase_tasks()
+        self._tasks = {task.name: task for task in tasks}
+        # a real session per assignment: the backend sweeps the job's
+        # tasks and the metric decides the per-phase cap requests
+        self.pm = PowerManager(tasks=tasks, metric=self.metric,
+                               backend=self.backend, spec=self.spec)
+        self.local_t = t
+        self.assigned_at = t
+
+    def release(self) -> Job:
+        if self.job is None:
+            raise RuntimeError(f"{self.name} is idle")
+        job, self.job = self.job, None
+        self.pm = None
+        self._tasks = {}
+        self.grant_w = 0.0
+        return job
+
+    def set_grant(self, watts: float) -> None:
+        self.grant_w = watts
+        if self.pm is not None:
+            self.pm.set_grant(watts)
+
+    # -- what the controller asks ------------------------------------------
+    def request_w(self) -> float:
+        """The node's useful ceiling: the largest per-phase cap its
+        schedule wants — watts above this buy nothing."""
+        if self.pm is None or self.job is None:
+            return self.floor_w
+        caps = [self.pm.cap_for(name)
+                for name, _ in self.job.step_phases()]
+        return max(max(caps), self.floor_w) if caps else self.floor_w
+
+    def step_cost(self, grant_w: float) -> tuple[float, float]:
+        """Modeled (seconds, joules) of ONE job step under ``grant_w``
+        (schedule caps clamped to the grant; no session side effects)."""
+        if self.pm is None or self.job is None:
+            return 0.0, 0.0
+        t = e = 0.0
+        for name, weight in self.job.step_phases():
+            cap = min(self.pm.cap_for(name), grant_w)
+            m = self.backend.measure(self._tasks[name], cap)
+            t += m.runtime * weight
+            e += m.energy * weight
+        return t, e
+
+    def throughput_at(self, grant_w: float) -> float:
+        """Modeled tokens/s of this node's job under ``grant_w``."""
+        if self.job is None:
+            return 0.0
+        s, _ = self.step_cost(grant_w)
+        return self.job.tokens_per_step() / s if s > 0 else 0.0
+
+    def sensitivity(self, delta_w: float = 8.0) -> float:
+        """Marginal perf-per-watt at the current grant: the finite
+        difference of the modeled throughput curve.  This is what the
+        node 'reports' to the fleet controller."""
+        if self.job is None:
+            return 0.0
+        hi = min(self.grant_w + delta_w, self.ceil_w)
+        lo = max(self.grant_w - delta_w, self.floor_w)
+        if hi <= lo:
+            return 0.0
+        return max(0.0, (self.throughput_at(hi) - self.throughput_at(lo))
+                   / (hi - lo))
+
+    # -- execution ----------------------------------------------------------
+    def run_quantum(self, until: float) -> NodeSample | None:
+        """Execute whole job steps until the node's local clock reaches
+        ``until``; returns the quantum's telemetry sample (None if the
+        node did nothing).  Runs through the real session: ``next_cap``
+        (grant-clamped), coalesced ``apply_cap`` writes with the
+        backend's transition price, and ``observe()`` feedback."""
+        if self.job is None or self.pm is None:
+            return None
+        t0 = self.local_t
+        tokens = steps = violations = 0
+        energy = 0.0
+        while not self.job.done and self.local_t < until:
+            step_s = step_j = 0.0
+            for name, weight in self.job.step_phases():
+                cap = self.pm.next_cap(name)
+                if self.pm.apply_cap(cap):   # a real write: pay for it
+                    step_s += self.backend.transition_seconds
+                    step_j += self.backend.transition_energy_j
+                m = self.backend.measure(self._tasks[name], cap)
+                self.pm.observe(name, m.runtime, m.energy, cap=cap,
+                                clock_fraction=m.clock_fraction)
+                step_s += m.runtime * weight
+                step_j += m.energy * weight
+                # physical over-budget: an unattainable cap pins the chip
+                # at f_min and the draw exceeds what was granted
+                if m.avg_power > self.grant_w + 1.0:
+                    violations += 1
+            tokens += self.job.advance(step_s)
+            steps += 1
+            energy += step_j
+            self.local_t += step_s
+        if steps == 0:
+            return None
+        return NodeSample(
+            t=t0, node=self.name, cabinet=self.cabinet,
+            job=self.job.name, kind=self.job.kind, grant_w=self.grant_w,
+            tokens=tokens, energy_j=energy, busy_s=self.local_t - t0,
+            steps=steps, violations=violations)
+
+
+class SimulatedCluster:
+    """N nodes, one facility budget, one virtual clock.
+
+    ``run(jobs, budget, until_s)`` drives the whole control loop each
+    quantum: release finished jobs, reconcile placement against the
+    current envelope (``FleetScheduler.tick`` — admissions, preemptions,
+    resumes), re-decide grants (``FleetPowerController.redistribute``,
+    conservation asserted per allocation), then let every busy node
+    execute its steps on the shared clock.
+    """
+
+    def __init__(self, n_nodes: int, cabinet_size: int = 4,
+                 spec: SuperchipSpec = DEFAULT_SUPERCHIP,
+                 metric: str = "sed", policy: str = "sensitivity",
+                 quantum_s: float = 1.0,
+                 useful_margin_w: float = USEFUL_MARGIN_W):
+        if n_nodes < 1:
+            raise ValueError("need at least one node")
+        self.spec = spec
+        self.quantum_s = quantum_s
+        self.useful_margin_w = useful_margin_w
+        self.nodes = [
+            FleetNode(name=f"cab{i // cabinet_size}/n{i:02d}",
+                      cabinet=f"cab{i // cabinet_size}", spec=spec,
+                      metric=metric)
+            for i in range(n_nodes)]
+        self.clock = VirtualClock()
+        self.controller = FleetPowerController(policy=policy)
+        self.telemetry = FleetTelemetry()
+        self.scheduler: FleetScheduler | None = None
+        self.allocations: list = []
+
+    # -- node views (deterministic order) -----------------------------------
+    def free_nodes(self) -> list[FleetNode]:
+        return [n for n in self.nodes if not n.busy]
+
+    def busy_nodes(self) -> list[FleetNode]:
+        return [n for n in self.nodes if n.busy]
+
+    # -- the control loop ---------------------------------------------------
+    def run(self, jobs: Iterable[Job], budget, until_s: float) -> dict:
+        trace = BudgetTrace.of(budget)
+        sched = FleetScheduler(
+            list(jobs),
+            min_node_w=self.nodes[0].floor_w + self.useful_margin_w)
+        self.scheduler = sched
+        while self.clock.now < until_s:
+            now = self.clock.now
+            budget_w = trace.at(now)
+
+            # 1. harvest finished jobs -> free their nodes (and watts)
+            for node in self.busy_nodes():
+                if node.job.done:
+                    self.telemetry.record_completion()
+                    sched.complete(node.release())
+
+            # 2. reconcile placement against the current envelope
+            events = sched.tick(now, self, budget_w)
+            for _ in events["preempted"]:
+                self.telemetry.record_preemption()
+
+            busy = self.busy_nodes()
+            if not busy and not sched.has_work:
+                break
+
+            # 3. re-decide grants (hierarchical, conservation asserted)
+            if busy:
+                alloc = self.controller.redistribute(budget_w, busy, t=now)
+                self.allocations.append(alloc)
+                self.telemetry.record_grants(alloc.node_w)
+                for node in busy:
+                    node.set_grant(alloc.node_w[node.name])
+            for node in self.free_nodes():
+                node.set_grant(0.0)    # power-gated
+
+            # 4. everyone executes on the shared clock
+            for node in busy:
+                sample = node.run_quantum(now + self.quantum_s)
+                if sample is not None:
+                    self.telemetry.record(sample)
+            self.clock.advance(self.quantum_s)
+        # harvest jobs that finished during the final quantum — the loop
+        # exit must not leave their completion unrecorded / node busy
+        for node in self.busy_nodes():
+            if node.job.done:
+                self.telemetry.record_completion()
+                sched.complete(node.release())
+        return self.telemetry.counters(elapsed_s=self.clock.now)

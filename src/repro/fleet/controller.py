@@ -1,0 +1,173 @@
+"""Hierarchical fleet power arbitration: facility -> cabinet -> node -> phase.
+
+The generalization (and runtime consumer) of ``PodPowerArbiter``: one
+facility budget flows down a hierarchy
+
+  facility          one envelope for the whole fleet (the ORNL-style
+                    system cap, arXiv 2408.01552)
+  cabinet           roll-up accounting + conservation boundary
+  node (superchip)  a grant installed as ``PowerManager.set_grant`` —
+                    the ceiling on every cap the node's session applies
+  phase             the node's own CapSchedule picks per-phase caps
+                    below the grant; host-vs-accelerator steering within
+                    a phase happens in the power model (host draws first)
+
+Allocation is the EcoShift-style performance-aware redistribution
+(arXiv 2604.17635): every node reports its *sensitivity* — the marginal
+tokens/s another watt buys, a finite difference over its modeled
+throughput curve — and the controller water-fills the budget
+(``repro.power.weighted_split``), then refines with greedy
+watt-transfers from the least-sensitive donor to the most-sensitive
+recipient while a transfer still buys fleet throughput.  The starting
+split dominates a static even split pointwise (equal-weight water-fill
+grants every node at least ``min(budget/n, request)``), and transfers
+only ever improve modeled fleet tokens/s, so sensitivity steering is
+never worse than the even baseline it is benchmarked against.
+
+Conservation is structural: each level's grants sum to at most its
+parent's budget whenever the budget covers the floors (below the floors
+the physics wins — idle draw can't be capped away); asserted per
+allocation and property-tested in ``tests/test_fleet.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.power.arbiter import weighted_split
+
+#: Watts moved per refinement transfer, and the cap on transfer rounds
+#: (per node) — bounds controller work per re-decide.
+TRANSFER_W = 8.0
+TRANSFER_ROUNDS_PER_NODE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetAllocation:
+    """One re-decide's output: grants at every hierarchy level."""
+
+    t: float
+    facility_w: float
+    cabinet_w: dict[str, float]
+    node_w: dict[str, float]
+    sensitivities: dict[str, float]
+
+    def assert_conserved(self, floors: dict[str, float],
+                         tol: float = 1e-6) -> None:
+        """Sum(child grants) <= parent budget at every level — unless the
+        budget is below the physical floors, where the floors win."""
+        total = sum(self.node_w.values())
+        if self.facility_w >= sum(floors.values()) - tol:
+            assert total <= self.facility_w + tol, \
+                (total, self.facility_w)
+        roll = {}
+        for node, w in self.node_w.items():
+            cab = node.split("/")[0]
+            roll[cab] = roll.get(cab, 0.0) + w
+        for cab, w in roll.items():
+            assert abs(self.cabinet_w[cab] - w) <= tol, (cab, w)
+
+
+class FleetPowerController:
+    """Online re-decider for the fleet's budget split.
+
+    ``policy``:
+      * ``"even"``        static even split of the facility budget over
+                          busy nodes (the naive baseline: no requests, no
+                          sensitivities, headroom stranded on nodes that
+                          can't use it)
+      * ``"sensitivity"`` request-aware water-fill + marginal-perf-per-
+                          watt transfer refinement (the tentpole policy)
+    """
+
+    def __init__(self, policy: str = "sensitivity",
+                 transfer_w: float = TRANSFER_W,
+                 rounds_per_node: int = TRANSFER_ROUNDS_PER_NODE):
+        if policy not in ("even", "sensitivity"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.policy = policy
+        self.transfer_w = transfer_w
+        self.rounds_per_node = rounds_per_node
+        self.allocations = 0
+
+    # -- the re-decide entry point ----------------------------------------
+    def redistribute(self, budget_w: float, nodes: list,
+                     t: float = 0.0) -> FleetAllocation:
+        """Split ``budget_w`` across busy ``nodes`` (FleetNode-likes
+        exposing name/cabinet/floor_w/ceil_w/request_w()/throughput_at())."""
+        self.allocations += 1
+        if not nodes:
+            return FleetAllocation(t, budget_w, {}, {}, {})
+        nodes = sorted(nodes, key=lambda n: n.name)
+        floors = {n.name: n.floor_w for n in nodes}
+        if self.policy == "even":
+            # static even split, blind to requests and sensitivities —
+            # but still conserving: an equal-weight water-fill against
+            # each node's HARDWARE ceiling only, so heterogeneous floors
+            # can't push the sum past the budget
+            grants = weighted_split(
+                {n.name: n.ceil_w for n in nodes}, budget_w,
+                floor=floors, ceil={n.name: n.ceil_w for n in nodes},
+                weights={n.name: 1.0 for n in nodes})
+        else:
+            grants = self._steer(budget_w, nodes, floors)
+        cabinets: dict[str, float] = {}
+        for n in nodes:
+            cabinets[n.cabinet] = cabinets.get(n.cabinet, 0.0) \
+                + grants[n.name]
+        alloc = FleetAllocation(
+            t=t, facility_w=budget_w, cabinet_w=cabinets, node_w=grants,
+            sensitivities={n.name: n.sensitivity() for n in nodes}
+            if self.policy == "sensitivity" else {})
+        alloc.assert_conserved(floors)
+        return alloc
+
+    # -- sensitivity steering ---------------------------------------------
+    def _steer(self, budget_w: float, nodes: list,
+               floors: dict[str, float]) -> dict[str, float]:
+        by_name = {n.name: n for n in nodes}
+        requests = {n.name: n.request_w() for n in nodes}
+        ceils = {n.name: min(requests[n.name], n.ceil_w) for n in nodes}
+        # equal-weight water-fill: every node gets at least
+        # min(budget/n, request); slack from saturated (low-request)
+        # nodes re-flows instead of stranding
+        grants = weighted_split(requests, budget_w, floor=floors,
+                                ceil=ceils,
+                                weights={k: 1.0 for k in requests})
+
+        # greedy marginal refinement: move transfer_w from the donor with
+        # the smallest throughput loss to the recipient with the largest
+        # gain while the move buys fleet tokens/s.  Modeled throughput is
+        # monotone in the grant, so every accepted move improves on the
+        # water-fill (and hence on the even split).
+        dw = self.transfer_w
+        cache: dict[tuple[str, float], float] = {}
+
+        def thr(name: str, g: float) -> float:
+            key = (name, round(g, 6))
+            if key not in cache:
+                cache[key] = by_name[name].throughput_at(g)
+            return cache[key]
+
+        for _ in range(self.rounds_per_node * len(nodes)):
+            best_gain, recipient = 0.0, None
+            for k in sorted(grants):
+                g = grants[k]
+                if g + dw <= ceils[k]:
+                    gain = thr(k, g + dw) - thr(k, g)
+                    if gain > best_gain + 1e-12:
+                        best_gain, recipient = gain, k
+            if recipient is None:
+                break
+            best_loss, donor = float("inf"), None
+            for k in sorted(grants):
+                if k == recipient or grants[k] - dw < floors[k]:
+                    continue
+                loss = thr(k, grants[k]) - thr(k, grants[k] - dw)
+                if loss < best_loss - 1e-12:
+                    best_loss, donor = loss, k
+            if donor is None or best_gain <= best_loss + 1e-9:
+                break
+            grants[recipient] += dw
+            grants[donor] -= dw
+        return grants

@@ -1,0 +1,305 @@
+"""Power-aware job scheduling: a mixed train/serve queue onto fleet nodes.
+
+The ``Job`` protocol is deliberately thin: a job names its recurring
+phases (``repro.core.tasks.Task`` roofline terms — the same segmentations
+``launch/train.py`` and ``serving.engine`` run under), weights them into
+one *step*, and advances its own progress when the node executes a step.
+Two implementations ship:
+
+  * ``TrainJob`` — phases from ``repro.train.phases.training_phase_tasks``
+    (the exact per-step mix the training launcher caps); optionally wraps
+    a real jitted ``step_fn`` from ``repro.train.step.make_train_step``.
+    Preemption rolls progress back to the last checkpoint boundary and is
+    accounted through ``repro.runtime.supervisor.StepwiseSupervisor`` —
+    the same restart budget/backoff policy the blocking ``Supervisor``
+    applies to SIGTERM'd training runs.
+  * ``ServeJob`` — phases from ``repro.serving.engine.serve_phase_tasks``
+    at decode-chunk granularity; optionally wraps a real ``ServeEngine``
+    driven through its incremental ``start()``/``step()`` API, so a fleet
+    node actually serves requests between preemption points.
+
+``FleetScheduler`` places the queue under the facility power envelope:
+a node is only admitted when the budget still covers every busy node's
+physical floor plus a useful-work margin, and when the envelope shrinks
+below that, jobs are preempted (train first — they checkpoint — then
+serve, LIFO) and resumed after their supervisor backoff once the budget
+recovers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Protocol, runtime_checkable
+
+from repro.core.tasks import Task
+from repro.runtime.supervisor import StepwiseSupervisor
+
+
+@runtime_checkable
+class Job(Protocol):
+    """One schedulable unit of fleet work."""
+
+    name: str
+    kind: str           # "train" | "serve"
+
+    @property
+    def done(self) -> bool:
+        ...
+
+    def phase_tasks(self) -> list[Task]:
+        """The job's recurring phases with roofline terms — what the
+        node's PowerManager sweeps and schedules caps for."""
+        ...
+
+    def step_phases(self) -> list[tuple[str, float]]:
+        """``(phase_name, weight)`` making up ONE job step; ``weight``
+        scales the phase's modeled runtime/energy (e.g. a prefill that
+        recurs every Nth decode chunk amortizes at weight 1/N)."""
+        ...
+
+    def tokens_per_step(self) -> int:
+        ...
+
+    def advance(self, step_s: float) -> int:
+        """Commit one executed step (``step_s`` modeled seconds); returns
+        the tokens actually emitted."""
+        ...
+
+    def preempt(self) -> float:
+        """Cooperative preemption; returns the backoff delay (virtual
+        seconds) before the job may be re-placed."""
+        ...
+
+
+@dataclasses.dataclass
+class TrainJob:
+    """A capped training run: phases from ``training_phase_tasks``.
+
+    ``step_fn`` optionally carries a REAL jitted train step (the callable
+    ``launch/train.py`` builds via ``make_train_step``); the fleet then
+    executes it once per modeled step.  Progress checkpoints every
+    ``ckpt_every`` steps: a preemption rolls ``steps_done`` back to the
+    last boundary (the work since is lost, exactly as a restart-from-
+    checkpoint loses it) and pays the supervisor's restart backoff."""
+
+    name: str
+    cfg: object                    # repro.configs.base.ModelConfig
+    batch: int
+    seq: int
+    total_steps: int
+    ckpt_every: int = 50
+    chips: int = 1
+    step_fn: object = None         # Optional[Callable[[int], None]]
+    max_restarts: int = 8
+    kind: str = dataclasses.field(default="train", init=False)
+    steps_done: int = dataclasses.field(default=0, init=False)
+
+    def __post_init__(self):
+        self.supervisor = StepwiseSupervisor(max_restarts=self.max_restarts)
+        self._tasks: list[Task] | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.steps_done >= self.total_steps
+
+    def phase_tasks(self) -> list[Task]:
+        if self._tasks is None:
+            from repro.train.phases import training_phase_tasks
+            self._tasks = training_phase_tasks(
+                self.cfg, batch=self.batch, seq=self.seq, chips=self.chips)
+        return self._tasks
+
+    def step_phases(self) -> list[tuple[str, float]]:
+        return [(t.name, 1.0) for t in self.phase_tasks()]
+
+    def tokens_per_step(self) -> int:
+        return self.batch * self.seq
+
+    def advance(self, step_s: float) -> int:
+        if self.step_fn is not None:
+            self.step_fn(self.steps_done)
+        self.steps_done += 1
+        return self.tokens_per_step()
+
+    def preempt(self) -> float:
+        # roll back to the last checkpoint boundary: the un-checkpointed
+        # tail is re-run after resume, as with a real restart
+        self.steps_done -= self.steps_done % self.ckpt_every
+        return self.supervisor.preempted()
+
+
+@dataclasses.dataclass
+class ServeJob:
+    """A serving stint: phases from ``serve_phase_tasks`` at decode-chunk
+    granularity (one step = ``batch`` slots x ``decode_chunk`` tokens,
+    with the prefill phase amortized over each request's lifetime).
+
+    ``engine`` optionally carries a real ``ServeEngine``; the job then
+    drives it through ``start()``/``step()`` so each fleet step performs
+    one actual admission round + decode chunk, and token counts come from
+    the engine instead of the model.  Serving holds no checkpoint: a
+    preemption drops in-flight state, gives the lost (partial) tokens
+    back out of ``emitted``, and the resumed stint re-``start``s with
+    only the not-yet-finished requests, their partial output reset.
+    Fleet telemetry counts EXECUTED tokens, so regenerated work appears
+    twice there — exactly as a rolled-back TrainJob re-executes (and
+    re-counts) its un-checkpointed steps."""
+
+    name: str
+    cfg: object                    # repro.configs.base.ModelConfig
+    batch: int
+    prompt: int
+    new_tokens: int                # per request
+    total_requests: int
+    decode_chunk: int = 8
+    chips: int = 1
+    engine: object = None          # Optional[repro.serving.engine.ServeEngine]
+    requests: list = None          # real-engine mode: the stream to serve
+    max_restarts: int = 8
+    kind: str = dataclasses.field(default="serve", init=False)
+    emitted: int = dataclasses.field(default=0, init=False)
+
+    def __post_init__(self):
+        self.supervisor = StepwiseSupervisor(max_restarts=self.max_restarts)
+        self._tasks: list[Task] | None = None
+        self._started = False
+
+    @property
+    def total_tokens(self) -> int:
+        return self.total_requests * self.new_tokens
+
+    @property
+    def done(self) -> bool:
+        if self.engine is not None:
+            return self._started and not self.engine.pending
+        return self.emitted >= self.total_tokens
+
+    def phase_tasks(self) -> list[Task]:
+        if self._tasks is None:
+            from repro.serving.engine import serve_phase_tasks
+            self._tasks = serve_phase_tasks(
+                self.cfg, batch=self.batch, prompt=self.prompt,
+                new_tokens=self.decode_chunk, chips=self.chips)
+        return self._tasks
+
+    def step_phases(self) -> list[tuple[str, float]]:
+        # decode runs every step; one prefill per request lifetime
+        # (new_tokens / decode_chunk steps) amortizes across the stint
+        prefill_weight = self.decode_chunk / max(self.new_tokens, 1)
+        return [("prefill", prefill_weight), ("decode", 1.0)]
+
+    def tokens_per_step(self) -> int:
+        return self.batch * self.decode_chunk
+
+    def advance(self, step_s: float) -> int:
+        if self.engine is not None:
+            if not self._started:
+                # (re-)start the stint: only not-yet-finished requests go
+                # back in, and a request interrupted mid-generation is
+                # reset — its partial output was discarded with the
+                # preempted engine state and will be regenerated
+                todo = [r for r in (self.requests or []) if not r.done]
+                for r in todo:
+                    r.generated.clear()
+                self.engine.start(todo)
+                self._started = True
+            before = sum(len(r.generated) for r in self.engine.finished)
+            in_flight_before = self.engine.in_flight_tokens
+            self.engine.step()
+            fresh = (sum(len(r.generated) for r in self.engine.finished)
+                     - before) + (self.engine.in_flight_tokens
+                                  - in_flight_before)
+            self.emitted += fresh
+            return fresh
+        fresh = min(self.tokens_per_step(), self.total_tokens - self.emitted)
+        self.emitted += fresh
+        return fresh
+
+    def preempt(self) -> float:
+        if self.engine is not None and self._started:
+            # in-flight generation is lost with the engine state; it was
+            # counted into ``emitted`` as it streamed, so give it back —
+            # the resumed stint regenerates (and re-counts) it
+            self.emitted -= self.engine.in_flight_tokens
+            self._started = False
+        return self.supervisor.preempted()
+
+
+@dataclasses.dataclass
+class _Paused:
+    job: Job
+    eligible_at: float
+
+
+class FleetScheduler:
+    """FCFS placement of a job queue under the facility power envelope.
+
+    ``min_node_w`` is the watts a node must be guaranteed before placing
+    work on it: its physical floor (idle draw can't be capped away) plus a
+    useful-work margin.  ``tick`` reconciles the fleet each control
+    quantum: resume eligible preempted jobs, preempt while the envelope is
+    over-subscribed, admit while it has headroom."""
+
+    def __init__(self, jobs, min_node_w: float):
+        self.queue: deque[Job] = deque(jobs)
+        self.min_node_w = min_node_w
+        self.paused: list[_Paused] = []
+        self.completed: list[Job] = []
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.paused)
+
+    def fits(self, n_busy: int, budget_w: float) -> bool:
+        """Whether the envelope supports one MORE busy node."""
+        return (n_busy + 1) * self.min_node_w <= budget_w
+
+    def complete(self, job: Job) -> None:
+        job.supervisor.completed("done")
+        self.completed.append(job)
+
+    def tick(self, t: float, cluster, budget_w: float) -> dict:
+        """One scheduling round; returns ``{"admitted": [...],
+        "preempted": [...]}`` (job names, deterministic order)."""
+        admitted, preempted = [], []
+
+        # 1. preempt while the shrunken envelope can't float the busy set:
+        #    train jobs first (they checkpoint), then serve, LIFO each.
+        busy = cluster.busy_nodes()
+        while busy and len(busy) * self.min_node_w > budget_w:
+            victims = sorted(
+                busy, key=lambda n: (n.job.kind != "train", -n.assigned_at,
+                                     n.name))
+            node = victims[0]
+            job = node.release()
+            backoff = job.preempt()
+            self.paused.append(_Paused(job, eligible_at=t + backoff))
+            preempted.append(job.name)
+            busy = cluster.busy_nodes()
+
+        # 2. resume eligible paused jobs ahead of fresh queue work
+        #    (oldest eligibility first, then name, for determinism)
+        self.paused.sort(key=lambda p: (p.eligible_at, p.job.name))
+        for p in list(self.paused):
+            if p.eligible_at > t:
+                break
+            free = cluster.free_nodes()
+            if not free or not self.fits(len(cluster.busy_nodes()),
+                                         budget_w):
+                break
+            self.paused.remove(p)
+            free[0].assign(p.job, t)
+            admitted.append(p.job.name)
+
+        # 3. admit fresh jobs FCFS while nodes and watts allow
+        while self.queue:
+            free = cluster.free_nodes()
+            if not free or not self.fits(len(cluster.busy_nodes()),
+                                         budget_w):
+                break
+            job = self.queue.popleft()
+            free[0].assign(job, t)
+            admitted.append(job.name)
+
+        return {"admitted": admitted, "preempted": preempted}

@@ -1,0 +1,102 @@
+"""Fleet telemetry bus: per-node observations -> fleet-level counters.
+
+Every ``FleetNode`` publishes one ``NodeSample`` per control quantum
+(tokens emitted, modeled joules, busy seconds, cap-violation count) and
+the controller publishes every grant allocation.  The bus keeps
+
+  * a bounded tail of raw samples (debugging / tests), and
+  * unbounded aggregate counters — the numbers ``BENCH_fleet.json``
+    records and the controller's re-decide loop consumes.
+
+Everything here is pure arithmetic on the samples it is fed: no wall
+clock, no randomness — two identical cluster runs produce bit-identical
+counters (asserted by ``tests/test_fleet.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSample:
+    """One node's activity over one control quantum (virtual time)."""
+
+    t: float                 # quantum start, virtual seconds
+    node: str
+    cabinet: str
+    job: str
+    kind: str                # "train" | "serve"
+    grant_w: float           # the cap ceiling the controller granted
+    tokens: int              # tokens emitted this quantum
+    energy_j: float          # modeled joules this quantum
+    busy_s: float            # virtual seconds of job work this quantum
+    steps: int               # job steps completed this quantum
+    violations: int          # phases whose modeled draw exceeded the grant
+
+
+class FleetTelemetry:
+    """Aggregates ``NodeSample``s and controller grant events."""
+
+    def __init__(self, history_limit: int = 4096):
+        self.history_limit = history_limit
+        self.samples: list[NodeSample] = []
+        # -- unbounded aggregate counters ---------------------------------
+        self.tokens = 0
+        self.energy_j = 0.0
+        self.busy_s = 0.0
+        self.steps = 0
+        self.violations = 0
+        self.cap_grants = 0          # grant (re-)allocations issued
+        self.preemptions = 0
+        self.completions = 0
+        self.by_kind: dict[str, dict[str, float]] = {}
+
+    # -- feeds -------------------------------------------------------------
+    def record(self, s: NodeSample) -> None:
+        self.samples.append(s)
+        if len(self.samples) > self.history_limit:
+            del self.samples[:len(self.samples) - self.history_limit]
+        self.tokens += s.tokens
+        self.energy_j += s.energy_j
+        self.busy_s += s.busy_s
+        self.steps += s.steps
+        self.violations += s.violations
+        k = self.by_kind.setdefault(
+            s.kind, {"tokens": 0, "energy_j": 0.0, "busy_s": 0.0})
+        k["tokens"] += s.tokens
+        k["energy_j"] += s.energy_j
+        k["busy_s"] += s.busy_s
+
+    def record_grants(self, grants: dict[str, float]) -> None:
+        self.cap_grants += len(grants)
+
+    def record_preemption(self) -> None:
+        self.preemptions += 1
+
+    def record_completion(self) -> None:
+        self.completions += 1
+
+    # -- fleet-level view --------------------------------------------------
+    def counters(self, elapsed_s: float | None = None) -> dict:
+        """The fleet scoreboard.  ``elapsed_s`` (virtual) turns totals into
+        rates; joules-per-token is the paper's energy-efficiency axis
+        lifted to the fleet."""
+        out = {
+            "tokens": self.tokens,
+            "energy_j": self.energy_j,
+            "busy_s": self.busy_s,
+            "steps": self.steps,
+            "violations": self.violations,
+            "cap_grants": self.cap_grants,
+            "preemptions": self.preemptions,
+            "completions": self.completions,
+            "j_per_token": (self.energy_j / self.tokens
+                            if self.tokens else 0.0),
+            "by_kind": {k: dict(v) for k, v in sorted(self.by_kind.items())},
+        }
+        if elapsed_s is not None:
+            out["virtual_s"] = elapsed_s
+            out["tokens_per_s"] = (self.tokens / elapsed_s
+                                   if elapsed_s > 0 else 0.0)
+        return out

@@ -87,6 +87,13 @@ class SuperchipSpec:
         """Default = no capping (paper: 1000 W default on GH200)."""
         return self.p_max
 
+    @property
+    def p_floor(self) -> float:
+        """Physical floor: host idle + chip deep-idle — draw that cannot
+        be capped away.  The per-consumer floor every budget arbiter
+        (PodPowerArbiter, repro.fleet) enforces."""
+        return self.host.p_idle + self.chip.p_idle_floor
+
     def cap_sweep(self) -> tuple[float, ...]:
         """Nine cap settings, the analogue of the paper's 200..1000 W sweep.
 

@@ -88,15 +88,21 @@ def main() -> None:
     if chips > 1 and pm.schedule.caps:
         # one pod budget split across superchips: each chip runs the same
         # phase mix here, so requests are uniform and grants symmetric.
-        # Demo on the hungriest scheduled phase (phase names differ per
-        # family: attention vs ssd_scan).
+        # Sized on the hungriest scheduled phase (phase names differ per
+        # family: attention vs ssd_scan); the grant is INSTALLED as this
+        # process's cap ceiling, so every phase cap the loop applies is
+        # clamped to the pod's share (heterogeneous fleets go through
+        # repro.fleet.FleetPowerController instead — see launch/fleet.py).
         phase0 = max(pm.schedule.caps, key=pm.schedule.caps.get)
         arbiter = PodPowerArbiter(
             budget_w=args.pod_budget_frac * chips * DEFAULT_SUPERCHIP.p_max)
         grants = arbiter.split_phase(
             {f"chip{i}": pm.schedule for i in range(chips)}, phase0)
+        my_grant = grants[f"chip{jax.process_index() % chips}"]
+        pm.set_grant(my_grant)
         print(f"[pod] budget {arbiter.budget_w:.0f}W over {chips} chips; "
-              f"{phase0}-phase grant {next(iter(grants.values())):.0f}W")
+              f"{phase0}-phase grant {my_grant:.0f}W (installed as cap "
+              f"ceiling)")
 
     def train_once(restart: int) -> str:
         state = init_state(cfg, run, jax.random.PRNGKey(0)).tree()

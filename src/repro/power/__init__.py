@@ -6,7 +6,9 @@ Layers (paper section 2-4, plus its section-5 future work as a runtime):
   backends.py  CapBackend HAL: simulated, logging, hwmon-stub writes
   manager.py   PowerManager session: decide -> phase() -> observe() ->
                re-decide, plus CapSchedule and modeled step accounting
-  arbiter.py   PodPowerArbiter: one pod budget across N superchips
+  arbiter.py   weighted_split + PodPowerArbiter: one budget, N consumers
+               (``repro.fleet`` builds the facility->cabinet->node
+               hierarchy on the same primitive)
 
 Quick start::
 
@@ -16,7 +18,8 @@ Quick start::
         ...                      # runs under the attention cap
     stats = pm.account_step()    # modeled energy vs uncapped
 
-``repro.core.steering`` remains as a deprecation shim over this package.
+``repro.core.steering`` is retired (ImportError pointer); the fleet layer
+above this package lives in ``repro.fleet``.
 """
 
 from repro.power.metrics import (Metric, available_metrics, get_metric,
@@ -25,7 +28,7 @@ from repro.power.backends import (CapBackend, HwmonBackend, LoggingBackend,
                                   SimulatedBackend)
 from repro.power.manager import (CapDecision, CapSchedule, PhaseRecord,
                                  PowerGoal, PowerManager, SteeringGoal)
-from repro.power.arbiter import PodPowerArbiter
+from repro.power.arbiter import CapSource, PodPowerArbiter, weighted_split
 
 __all__ = [
     "Metric", "register_metric", "get_metric", "available_metrics",
@@ -33,5 +36,5 @@ __all__ = [
     "CapBackend", "SimulatedBackend", "LoggingBackend", "HwmonBackend",
     "PowerGoal", "SteeringGoal", "CapDecision", "CapSchedule",
     "PhaseRecord", "PowerManager",
-    "PodPowerArbiter",
+    "CapSource", "PodPowerArbiter", "weighted_split",
 ]

@@ -16,7 +16,8 @@ task-specific dynamic power-cap adjustment"): one object that
      now owned here).
 
 Offline use (the old ``PowerSteeringController`` flow) is
-``PowerManager(table=...).schedule``; ``core.steering`` keeps a shim.
+``PowerManager(table=...).schedule``; the ``core.steering`` shim is
+retired (importing it raises with a pointer here).
 """
 
 from __future__ import annotations
@@ -118,6 +119,10 @@ class PowerManager:
     explore_every:   every N-th visit to a phase probes a sweep cap
                instead of the scheduled one (0 = never), so online
                observations keep the whole curve fresh under drift.
+    cap_limit:       externally imposed ceiling on every applied cap
+               (watts) — the hook a fleet-level arbiter uses to grant this
+               node less than its schedule asks for.  ``None`` = no limit;
+               see ``set_grant``.
     history_limit:   PhaseRecords kept (tail); aggregate counters are
                unbounded.
     """
@@ -133,6 +138,7 @@ class PowerManager:
                  redecide_every: int = 0,
                  ema_alpha: float = 0.5,
                  explore_every: int = 0,
+                 cap_limit: float | None = None,
                  history_limit: int = 1024):
         self.spec = spec
         self.backend = backend if backend is not None \
@@ -146,6 +152,7 @@ class PowerManager:
         self.redecide_every = redecide_every
         self.ema_alpha = ema_alpha
         self.explore_every = explore_every
+        self.cap_limit = cap_limit
         self.history_limit = history_limit
         self.history: list[PhaseRecord] = []
         self.transitions = 0
@@ -237,21 +244,31 @@ class PowerManager:
     def cap_for(self, phase: str) -> float:
         return self.schedule.cap_for(phase)
 
+    def set_grant(self, cap_w: float | None) -> None:
+        """Install a fleet-granted ceiling: every applied cap is clamped to
+        ``cap_w`` until the next grant (``None`` clears the limit).  This
+        is how a ``repro.fleet`` arbiter reaches into a node's session —
+        the schedule still names the *wanted* per-phase caps (the node's
+        requests), the grant bounds what actually gets written."""
+        self.cap_limit = cap_w
+
     def next_cap(self, phase: str) -> float:
         """Scheduled cap for ``phase`` — except every ``explore_every``-th
         visit, which probes the sweep round-robin to keep the table's
-        off-schedule rows refreshable under drift."""
+        off-schedule rows refreshable under drift.  Always clamped to the
+        fleet grant (``cap_limit``) when one is installed."""
         cap = self.schedule.cap_for(phase)
-        if not self.explore_every:
-            return cap
-        n = self._visits[phase] = self._visits.get(phase, 0) + 1
-        if n % self.explore_every:
-            return cap
-        sweep = ([r.cap for r in self.table.for_task(phase)]
-                 or list(self.spec.cap_sweep()))
-        i = self._probe_idx[phase] = \
-            (self._probe_idx.get(phase, -1) + 1) % len(sweep)
-        return sweep[i]
+        if self.explore_every:
+            n = self._visits[phase] = self._visits.get(phase, 0) + 1
+            if not n % self.explore_every:
+                sweep = ([r.cap for r in self.table.for_task(phase)]
+                         or list(self.spec.cap_sweep()))
+                i = self._probe_idx[phase] = \
+                    (self._probe_idx.get(phase, -1) + 1) % len(sweep)
+                cap = sweep[i]
+        if self.cap_limit is not None:
+            cap = min(cap, self.cap_limit)
+        return cap
 
     def apply_cap(self, cap: float) -> bool:
         """Write ``cap`` through the backend unless it is already set

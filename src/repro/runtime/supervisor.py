@@ -82,6 +82,17 @@ class Supervisor:
     restarts: int = 0
     history: list = dataclasses.field(default_factory=list)
 
+    def _record_restart(self, kind: str, info) -> float:
+        """Shared restart bookkeeping: append the event, enforce the
+        restart budget, return the exponential-backoff delay (seconds)."""
+        self.history.append((kind, info))
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            raise RuntimeError(
+                f"exceeded max_restarts={self.max_restarts}: "
+                f"{self.history}")
+        return self.backoff_s * 2 ** (self.restarts - 1)
+
     def run(self, train_fn: Callable[[int], str]) -> str:
         while True:
             try:
@@ -89,15 +100,36 @@ class Supervisor:
                 self.history.append(("completed", reason))
                 return reason
             except Preemption:
-                self.history.append(("preempted", None))
+                delay = self._record_restart("preempted", None)
             except Exception as e:  # noqa: BLE001 - supervisor catches all
-                self.history.append(("crashed", repr(e)))
-            self.restarts += 1
-            if self.restarts > self.max_restarts:
-                raise RuntimeError(
-                    f"exceeded max_restarts={self.max_restarts}: "
-                    f"{self.history}")
-            time.sleep(self.backoff_s * 2 ** (self.restarts - 1))
+                delay = self._record_restart("crashed", repr(e))
+            time.sleep(delay)
+
+
+@dataclasses.dataclass
+class StepwiseSupervisor(Supervisor):
+    """The Supervisor's restart policy for cooperative, step-wise runtimes.
+
+    ``Supervisor.run`` wraps a *blocking* train function and sleeps through
+    its own backoff.  A fleet scheduler instead drives jobs one step at a
+    time on a virtual clock and preempts them cooperatively (power budget
+    shrank, node reassigned), so it needs the same accounting — restart
+    budget, exponential backoff, history — as explicit events rather than
+    a blocking loop.  ``preempted()`` / ``crashed()`` return the backoff
+    delay in (virtual) seconds; the caller decides when the job becomes
+    eligible to resume."""
+
+    def preempted(self) -> float:
+        """Record a cooperative preemption; returns the backoff delay the
+        job must wait before it is eligible for re-placement."""
+        return self._record_restart("preempted", None)
+
+    def crashed(self, err: BaseException | str) -> float:
+        return self._record_restart(
+            "crashed", err if isinstance(err, str) else repr(err))
+
+    def completed(self, reason: str) -> None:
+        self.history.append(("completed", reason))
 
 
 def plan_mesh_shape(n_devices: int, model_parallel: int = 16,

@@ -225,6 +225,12 @@ class ServeEngine:
     With a ``repro.power.PowerManager`` attached, prefill and decode run
     under their own phase caps, entered once per admission round / decode
     chunk (chunk-amortized ``observe()``).
+
+    Two driving styles: ``generate(requests)`` runs to drain, while
+    ``start(requests)`` + ``step()``-while-``pending`` exposes the same
+    loop one admission-round-plus-decode-chunk at a time, so an external
+    scheduler (``repro.fleet``) can interleave and preempt serving work at
+    chunk granularity.
     """
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, ctx: Ctx, params,
@@ -277,7 +283,17 @@ class ServeEngine:
         return cache, logits
 
     # -- serving loop ------------------------------------------------------
-    def generate(self, requests: list[Request]) -> list[Request]:
+    #
+    # The loop is exposed incrementally — ``start`` installs a request
+    # stream, each ``step`` runs one admission round plus one decode chunk
+    # — so an external driver (the fleet scheduler in ``repro.fleet``) can
+    # interleave serving work with other duties and preempt between chunks
+    # without losing in-flight state.  ``generate`` is the classic
+    # run-to-drain form on top.
+
+    def start(self, requests: list[Request]) -> None:
+        """Install a request stream and reset the device-resident state.
+        Steps are then driven by ``step()`` until ``pending`` is False."""
         # validate up front: one oversize request must not abort the call
         # after other requests already burned device work
         for req in requests:
@@ -286,43 +302,77 @@ class ServeEngine:
                     f"request {req.uid}: prompt {len(req.prompt)} + "
                     f"max_new_tokens {req.max_new_tokens} exceeds "
                     f"max_seq {self.max_seq}")
-        t0 = time.perf_counter()
-        sched = SlotScheduler(self.batch_size)
-        sched.submit(requests)
+        self._t0 = time.perf_counter()
+        self._sched = SlotScheduler(self.batch_size)
+        self._sched.submit(requests)
         B = self.batch_size
-        cache = lm.init_cache(self.ctx, self.cfg, B, self.max_seq)
-        cur = jnp.zeros((B,), jnp.int32)
-        index = jnp.zeros((B,), jnp.int32)
-        rem = jnp.zeros((B,), jnp.int32)
-        done = jnp.ones((B,), bool)
-        finished: list[Request] = []
+        self._cache = lm.init_cache(self.ctx, self.cfg, B, self.max_seq)
+        self._cur = jnp.zeros((B,), jnp.int32)
+        self._index = jnp.zeros((B,), jnp.int32)
+        self._rem = jnp.zeros((B,), jnp.int32)
+        self._done = jnp.ones((B,), bool)
+        self.finished: list[Request] = []
 
-        while sched.has_work:
-            # one phase entry per admitted request = one prefill program
-            # run under the prefill cap (back-to-back entries coalesce the
-            # cap write; the modeled measurement accounts each prefill)
-            for slot in sched.admit_ready():
-                with self._phase("prefill"):
-                    cache, logits = self._prefill_into_slot(
-                        cache, slot.request, slot.sid)
-                cur, index, rem, done = self._admit_fn(
-                    cur, index, rem, done, logits, slot.sid,
-                    len(slot.request.prompt), slot.request.max_new_tokens)
-            with self._phase("decode", calls=self.decode_chunk):
-                cache, cur, index, rem, done, out, _ = self._decode_fn(
-                    self.params, cache, cur, index, rem, done)
-            out_host = self._fetch(out)           # the chunk's ONE sync
-            self.sync_count += 1
-            now = time.perf_counter() - t0
-            for slot in sched.active():
-                row = out_host[slot.sid]
-                fresh = [int(t) for t in row[:_valid_len(row)]]
-                slot.request.generated.extend(fresh)
-                slot.emitted += len(fresh)
-                if slot.emitted >= slot.request.max_new_tokens:
-                    self.completion_s[slot.request.uid] = now
-                    finished.append(sched.release(slot))
-        return finished
+    @property
+    def pending(self) -> bool:
+        """Whether the installed stream still has queued or in-flight
+        requests (False before ``start``)."""
+        sched = getattr(self, "_sched", None)
+        return sched.has_work if sched is not None else False
+
+    @property
+    def in_flight_tokens(self) -> int:
+        """Tokens already generated for requests still occupying slots
+        (delivered to the Request but not yet finished) — what an
+        external driver loses if it abandons the stream mid-stint."""
+        sched = getattr(self, "_sched", None)
+        if sched is None:
+            return 0
+        return sum(len(s.request.generated) for s in sched.active())
+
+    def step(self) -> list[Request]:
+        """One engine step: admit whatever fits the free slots, run one
+        decode chunk, deliver the chunk's tokens.  Returns the requests
+        that finished THIS step (also appended to ``self.finished``)."""
+        if not self.pending:
+            return []
+        sched = self._sched
+        # one phase entry per admitted request = one prefill program
+        # run under the prefill cap (back-to-back entries coalesce the
+        # cap write; the modeled measurement accounts each prefill)
+        for slot in sched.admit_ready():
+            with self._phase("prefill"):
+                self._cache, logits = self._prefill_into_slot(
+                    self._cache, slot.request, slot.sid)
+            self._cur, self._index, self._rem, self._done = self._admit_fn(
+                self._cur, self._index, self._rem, self._done, logits,
+                slot.sid, len(slot.request.prompt),
+                slot.request.max_new_tokens)
+        with self._phase("decode", calls=self.decode_chunk):
+            (self._cache, self._cur, self._index, self._rem, self._done,
+             out, _) = self._decode_fn(
+                self.params, self._cache, self._cur, self._index,
+                self._rem, self._done)
+        out_host = self._fetch(out)           # the chunk's ONE sync
+        self.sync_count += 1
+        now = time.perf_counter() - self._t0
+        newly: list[Request] = []
+        for slot in sched.active():
+            row = out_host[slot.sid]
+            fresh = [int(t) for t in row[:_valid_len(row)]]
+            slot.request.generated.extend(fresh)
+            slot.emitted += len(fresh)
+            if slot.emitted >= slot.request.max_new_tokens:
+                self.completion_s[slot.request.uid] = now
+                newly.append(sched.release(slot))
+        self.finished.extend(newly)
+        return newly
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        self.start(requests)
+        while self.pending:
+            self.step()
+        return self.finished
 
 
 def _valid_len(row) -> int:

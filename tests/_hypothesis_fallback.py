@@ -1,7 +1,8 @@
 """Tiny deterministic stand-in for ``hypothesis`` when it is not installed.
 
 Only the surface the test suite uses is provided: ``st.floats``,
-``st.tuples``, ``st.lists``, ``@given`` and ``@settings``.  ``given`` runs
+``st.integers``, ``st.booleans``, ``st.tuples``, ``st.lists``,
+``st.sampled_from``, ``st.dictionaries``, ``@given`` and ``@settings``.  ``given`` runs
 the test body over a fixed-seed batch of generated examples, so the
 property tests still exercise a spread of inputs (just without shrinking
 or the full search strategies of real hypothesis).
@@ -40,8 +41,33 @@ class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
         return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
     @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+    @staticmethod
     def tuples(*strats: _Strategy) -> _Strategy:
         return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+    @staticmethod
+    def dictionaries(keys: _Strategy, values: _Strategy, min_size: int = 0,
+                     max_size: int | None = None, **_kw) -> _Strategy:
+        """Like hypothesis: key collisions shrink the dict, but at least
+        ``min_size`` distinct keys are guaranteed (bounded retries)."""
+        def draw(rng: random.Random):
+            hi = max_size if max_size is not None else min_size + 8
+            n = rng.randint(min_size, hi)
+            out = {}
+            attempts = 0
+            while len(out) < n and attempts < 20 * max(n, 1):
+                out[keys.example(rng)] = values.example(rng)
+                attempts += 1
+            return out
+        return _Strategy(draw)
 
     @staticmethod
     def lists(strat: _Strategy, min_size: int = 0,

@@ -1,0 +1,305 @@
+"""Fleet subsystem tests: virtual-clock determinism, hierarchical budget
+conservation, sensitivity steering vs the even split, power-aware
+scheduling (preemption / checkpoint rollback / resume), and driving a
+REAL ServeEngine through a fleet job."""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_model_config, get_run_config
+from repro.fleet import (BudgetTrace, FleetPowerController, ServeJob,
+                         SimulatedCluster, TrainJob, VirtualClock)
+from repro.hw.tpu import DEFAULT_SUPERCHIP
+from repro.runtime.supervisor import StepwiseSupervisor
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+LLAMA = get_model_config("llama3.2-3b")
+MAMBA = get_model_config("mamba2-370m")
+N_PMAX = DEFAULT_SUPERCHIP.p_max
+
+
+def _mixed_jobs():
+    """Heterogeneous queue: compute-bound train, decode-heavy serve
+    (memory-bound), prefill-heavy serve, small-model train."""
+    return [
+        TrainJob("train-llama", LLAMA, batch=8, seq=512, total_steps=10**9),
+        ServeJob("serve-decode", LLAMA, batch=64, prompt=2048,
+                 new_tokens=512, total_requests=10**9, decode_chunk=32),
+        ServeJob("serve-prefill", LLAMA, batch=16, prompt=8192,
+                 new_tokens=32, total_requests=10**9, decode_chunk=32),
+        TrainJob("train-mamba", MAMBA, batch=8, seq=512, total_steps=10**9),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# clock / budget trace
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock_monotone():
+    clk = VirtualClock()
+    assert clk.advance(1.5) == 1.5
+    with pytest.raises(ValueError):
+        clk.advance(-0.1)
+
+
+def test_budget_trace_step_function():
+    tr = BudgetTrace.of([(10.0, 500.0), (0.0, 1000.0)])  # unsorted input
+    assert tr.at(0.0) == 1000.0
+    assert tr.at(9.999) == 1000.0
+    assert tr.at(10.0) == 500.0
+    assert BudgetTrace.of(750.0).at(123.0) == 750.0
+
+
+# ---------------------------------------------------------------------------
+# determinism: the seed-stability contract for BENCH_fleet.json
+# ---------------------------------------------------------------------------
+
+def test_cluster_counters_bit_identical_across_runs():
+    """Same job queue + same budget trace => bit-identical counters (the
+    virtual clock keeps wall time and randomness out of the loop)."""
+    trace = [(0.0, 0.6 * 4 * N_PMAX), (5.0, 0.4 * 4 * N_PMAX),
+             (8.0, 0.12 * 4 * N_PMAX), (11.0, 0.4 * 4 * N_PMAX)]
+    outs = []
+    for _ in range(2):
+        c = SimulatedCluster(n_nodes=4, cabinet_size=2, policy="sensitivity")
+        outs.append(c.run(jobs=_mixed_jobs(), budget=trace, until_s=15.0))
+    assert json.dumps(outs[0], sort_keys=True) == \
+        json.dumps(outs[1], sort_keys=True)
+    assert outs[0]["tokens"] > 0 and outs[0]["energy_j"] > 0
+
+
+# ---------------------------------------------------------------------------
+# hierarchical conservation (property)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _StubNode:
+    """Controller-facing node double with a concave throughput curve."""
+
+    name: str
+    cabinet: str
+    request: float
+    scale: float
+    floor_w: float = 50.0
+    ceil_w: float = 330.0
+    grant_w: float = 100.0
+
+    def request_w(self) -> float:
+        return max(self.request, self.floor_w)
+
+    def throughput_at(self, g: float) -> float:
+        eff = min(max(g, self.floor_w), self.request_w())
+        return self.scale * (eff - 40.0) ** 0.5
+
+    def sensitivity(self) -> float:
+        return (self.throughput_at(self.grant_w + 8)
+                - self.throughput_at(self.grant_w - 8)) / 16.0
+
+
+_IDS = st.sampled_from(["a", "b", "c", "d", "e", "f", "g", "h"])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.dictionaries(_IDS,
+                       st.tuples(st.floats(min_value=60.0, max_value=330.0),
+                                 st.floats(min_value=1.0, max_value=50.0),
+                                 st.booleans()),
+                       min_size=1, max_size=8),
+       st.floats(min_value=150.0, max_value=1500.0),
+       st.booleans())
+def test_controller_conserves_budget(cfgs, budget, sens):
+    """Sum(node grants) <= facility budget at every allocation (when the
+    budget covers the floors), and cabinet grants roll up exactly — for
+    random node mixes under both policies."""
+    nodes = [_StubNode(name=f"cab{i % 2}/{k}", cabinet=f"cab{i % 2}",
+                       request=req, scale=sc)
+             for i, (k, (req, sc, _)) in enumerate(sorted(cfgs.items()))]
+    ctl = FleetPowerController(policy="sensitivity" if sens else "even")
+    alloc = ctl.redistribute(budget, nodes, t=1.0)
+    floors = {n.name: n.floor_w for n in nodes}
+    alloc.assert_conserved(floors)        # cabinet roll-up == node grants
+    if budget >= sum(floors.values()):
+        assert sum(alloc.node_w.values()) <= budget + 1e-6
+    for n in nodes:
+        assert alloc.node_w[n.name] >= n.floor_w - 1e-9
+        assert alloc.node_w[n.name] <= n.ceil_w + 1e-9
+
+
+def test_even_policy_conserves_with_heterogeneous_floors():
+    """The even split must water-fill, not clamp per-node: two nodes
+    with floors 50/150 under a 210 W budget may not be granted 255 W."""
+    nodes = [_StubNode("cab0/a", "cab0", request=330.0, scale=1.0),
+             _StubNode("cab0/b", "cab0", request=330.0, scale=1.0,
+                       floor_w=150.0)]
+    alloc = FleetPowerController(policy="even").redistribute(210.0, nodes)
+    assert sum(alloc.node_w.values()) <= 210.0 + 1e-6
+    assert alloc.node_w["cab0/b"] >= 150.0 - 1e-9
+
+
+def test_sensitivity_allocation_dominates_even_fleet_throughput():
+    """The refined allocation never models WORSE fleet throughput than
+    the even split it starts from (the transfer loop only accepts moves
+    that buy tokens/s), and it steers watts toward the high-value node."""
+    nodes = [_StubNode("cab0/a", "cab0", request=330.0, scale=30.0),
+             _StubNode("cab0/b", "cab0", request=120.0, scale=2.0),
+             _StubNode("cab1/c", "cab1", request=250.0, scale=10.0)]
+    budget = 540.0
+    alloc = FleetPowerController(policy="sensitivity").redistribute(
+        budget, nodes)
+    even_alloc = FleetPowerController(policy="even").redistribute(
+        budget, nodes)
+
+    def fleet_thr(a):
+        return sum(n.throughput_at(a.node_w[n.name]) for n in nodes)
+
+    assert fleet_thr(alloc) >= fleet_thr(even_alloc) - 1e-9
+    # watts the low-value node can't convert went to the hungriest node
+    assert alloc.node_w["cab0/a"] > even_alloc.node_w["cab0/a"]
+    assert alloc.node_w["cab0/b"] < even_alloc.node_w["cab0/b"]
+
+
+# ---------------------------------------------------------------------------
+# the headline: sensitivity steering vs static even split
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sensitivity_steering_beats_even_split():
+    """At equal facility budget, sensitivity-weighted steering buys more
+    fleet tokens/s than the static even split, at no worse J/token (the
+    acceptance criterion benchmarks/fleet_power.py gates in CI)."""
+    trace = [(0.0, 0.45 * 4 * N_PMAX)]
+    out = {}
+    for policy in ("even", "sensitivity"):
+        c = SimulatedCluster(n_nodes=4, cabinet_size=2, policy=policy)
+        out[policy] = c.run(jobs=_mixed_jobs(), budget=trace, until_s=20.0)
+    assert out["sensitivity"]["tokens_per_s"] > out["even"]["tokens_per_s"]
+    assert out["sensitivity"]["j_per_token"] <= \
+        out["even"]["j_per_token"] * 1.001
+
+
+# ---------------------------------------------------------------------------
+# power-aware scheduling: preemption, rollback, resume
+# ---------------------------------------------------------------------------
+
+def test_budget_dip_preempts_train_first_then_resumes():
+    dip = [(0.0, 0.6 * 2 * N_PMAX), (5.0, 100.0), (8.0, 0.6 * 2 * N_PMAX)]
+    c = SimulatedCluster(n_nodes=2, cabinet_size=2, policy="sensitivity")
+    jobs = [TrainJob("t", LLAMA, batch=8, seq=512, total_steps=10**9,
+                     ckpt_every=5),
+            ServeJob("s", LLAMA, batch=64, prompt=2048, new_tokens=512,
+                     total_requests=10**9, decode_chunk=32)]
+    out = c.run(jobs=jobs, budget=dip, until_s=12.0)
+    # the 100 W dip can't float ANY node (floor+margin = 80 -> 1 node ok,
+    # 2 nodes not): exactly one preemption, and it hits the train job
+    assert out["preemptions"] == 1
+    train = jobs[0]
+    assert ("preempted", None) in train.supervisor.history
+    assert jobs[1].supervisor.history == []      # serve kept its node
+    # after the budget recovers the train job is re-placed and runs again
+    assert any(n.busy and n.job is train for n in c.nodes)
+
+
+def test_preempted_train_job_rolls_back_to_checkpoint():
+    job = TrainJob("t", MAMBA, batch=2, seq=64, total_steps=1000,
+                   ckpt_every=10)
+    for _ in range(23):
+        job.advance(0.1)
+    assert job.steps_done == 23
+    job.preempt()
+    assert job.steps_done == 20          # un-checkpointed tail lost
+    assert job.supervisor.restarts == 1
+
+
+def test_stepwise_supervisor_enforces_restart_budget():
+    sup = StepwiseSupervisor(max_restarts=2, backoff_s=0.5)
+    assert sup.preempted() == pytest.approx(0.5)
+    assert sup.preempted() == pytest.approx(1.0)   # exponential backoff
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        sup.preempted()
+    assert [k for k, _ in sup.history] == ["preempted"] * 3
+
+
+def test_jobs_run_to_completion_and_release_nodes():
+    c = SimulatedCluster(n_nodes=2, cabinet_size=2, policy="even")
+    jobs = [TrainJob("t", MAMBA, batch=2, seq=64, total_steps=3),
+            ServeJob("s", MAMBA, batch=4, prompt=64, new_tokens=8,
+                     total_requests=2, decode_chunk=8)]
+    out = c.run(jobs=jobs, budget=2 * N_PMAX, until_s=50.0)
+    assert out["completions"] == 2
+    assert all(not n.busy for n in c.nodes)
+    assert jobs[0].steps_done == 3
+    assert jobs[1].emitted == jobs[1].total_tokens
+    assert out["virtual_s"] < 50.0       # loop stopped when work ran out
+
+
+# ---------------------------------------------------------------------------
+# a REAL ServeEngine driven as a fleet job
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serve_job_drives_real_engine():
+    from repro.models import lm
+    from repro.models.layers import Ctx
+    from repro.models.params import init_params
+    from repro.serving.engine import Request, ServeEngine
+    from repro.sharding import RULE_SETS
+    import jax
+
+    cfg = reduced(get_model_config("llama3.2-3b"))
+    run = get_run_config("llama3.2-3b", remat="none", logits_chunk=16)
+    ctx = Ctx(run, RULE_SETS[run.serve_rules_name], None)
+    params = init_params(lm.model_decls(cfg), jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=32,
+                         decode_chunk=4)
+    reqs = [Request(uid=i, prompt=[3 * i + 1, 5, 7], max_new_tokens=6)
+            for i in range(3)]
+    job = ServeJob("real", cfg, batch=2, prompt=8, new_tokens=6,
+                   total_requests=3, decode_chunk=4,
+                   engine=engine, requests=reqs)
+    c = SimulatedCluster(n_nodes=1, cabinet_size=1, policy="even")
+    out = c.run(jobs=[job], budget=N_PMAX, until_s=200.0)
+    assert job.done and out["completions"] == 1
+    done = engine.finished
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert all(len(r.generated) == 6 for r in done)
+    # fleet token counters came from the engine, not the model
+    assert out["tokens"] == sum(len(r.generated) for r in done) == 18
+
+
+@pytest.mark.slow
+def test_serve_job_preempt_resume_no_duplicate_tokens():
+    """A real-engine ServeJob preempted mid-stint resumes cleanly: no
+    request keeps stale partial output (every stream is regenerated, not
+    duplicated) and ``emitted`` ends at exactly the delivered total."""
+    from repro.models import lm
+    from repro.models.layers import Ctx
+    from repro.models.params import init_params
+    from repro.serving.engine import Request, ServeEngine
+    from repro.sharding import RULE_SETS
+    import jax
+
+    cfg = reduced(get_model_config("llama3.2-3b"))
+    run = get_run_config("llama3.2-3b", remat="none", logits_chunk=16)
+    ctx = Ctx(run, RULE_SETS[run.serve_rules_name], None)
+    params = init_params(lm.model_decls(cfg), jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=32,
+                         decode_chunk=4)
+    reqs = [Request(uid=i, prompt=[3 * i + 1, 5, 7], max_new_tokens=6)
+            for i in range(3)]
+    job = ServeJob("real", cfg, batch=2, prompt=8, new_tokens=6,
+                   total_requests=3, decode_chunk=4,
+                   engine=engine, requests=reqs)
+    job.advance(0.1)                  # stint 1: starts, first chunk
+    assert engine.in_flight_tokens > 0
+    job.preempt()                     # mid-stint: in-flight work dropped
+    while not job.done:
+        job.advance(0.1)              # stint 2: re-start + run to drain
+    assert all(len(r.generated) == 6 for r in reqs)   # no duplication
+    assert job.emitted == 18          # lost tokens refunded, then redone

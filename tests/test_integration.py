@@ -10,7 +10,8 @@ import pytest
 
 from repro.ckpt import checkpoint
 from repro.configs.base import ModelConfig, RunConfig
-from repro.core import PowerSteeringController, SteeringGoal, measure_sweep
+from repro.core import measure_sweep
+from repro.power import PowerManager
 from repro.data.pipeline import DataConfig, TokenSource
 from repro.hw.tpu import DEFAULT_SUPERCHIP
 from repro.models.layers import Ctx
@@ -106,8 +107,8 @@ def test_energy_ledger_integrates_with_training():
     table = measure_sweep(tasks)
     stats = {}
     for metric in ("sed", "ed"):
-        sched = PowerSteeringController(DEFAULT_SUPERCHIP).schedule(
-            table, SteeringGoal(metric=metric))
+        sched = PowerManager(table, metric=metric,
+                             spec=DEFAULT_SUPERCHIP).schedule
         ledger = PhaseEnergyLedger(sched, tasks, min_dwell_s=2e-4)
         stats[metric] = ledger.account_step()
         assert stats[metric]["energy_j"] > 0

@@ -14,7 +14,12 @@ from repro.models.lsms import paper_calibrated_tasks
 from repro.power import (CapSchedule, HwmonBackend, LoggingBackend,
                          PodPowerArbiter, PowerGoal, PowerManager,
                          SimulatedBackend, available_metrics, get_metric,
-                         register_metric)
+                         register_metric, weighted_split)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
 
 SPEC = DEFAULT_SUPERCHIP
 CHIP = SPEC.chip
@@ -251,6 +256,119 @@ def test_arbiter_split_phase_uses_schedules(table):
     arb = PodPowerArbiter(budget_w=2 * SPEC.p_max)
     grants = arb.split_phase({"c0": sched, "c1": sched}, "zgemm_ts64")
     assert grants["c0"] == grants["c1"] == sched.cap_for("zgemm_ts64")
+
+
+def test_arbiter_empty_requests():
+    assert PodPowerArbiter(budget_w=500.0).split({}) == {}
+
+
+def test_arbiter_single_node():
+    arb = PodPowerArbiter(budget_w=200.0)
+    # request above budget: the whole above-floor budget goes to it
+    assert arb.split({"a": 330.0}) == {"a": pytest.approx(200.0)}
+    # request below budget: granted as-is
+    assert arb.split({"a": 150.0}) == {"a": 150.0}
+
+
+def test_arbiter_budget_below_total_floor():
+    arb = PodPowerArbiter(budget_w=3 * 40.0)   # floor is 50 W/chip
+    grants = arb.split({"a": 300.0, "b": 200.0, "c": 90.0})
+    assert all(g == pytest.approx(arb.floor) for g in grants.values())
+
+
+def test_arbiter_requests_exactly_at_ceiling():
+    arb = PodPowerArbiter(budget_w=2 * SPEC.p_max)
+    req = {"a": SPEC.p_max, "b": SPEC.p_max}
+    assert arb.split(req) == req          # fits exactly: granted verbatim
+    # over-requests clamp to the ceiling first, then fit exactly
+    assert arb.split({"a": SPEC.p_max + 50, "b": SPEC.p_max}) == req
+
+
+# ---------------------------------------------------------------------------
+# weighted_split (the generic machinery under arbiter + fleet controller)
+# ---------------------------------------------------------------------------
+
+_IDS = st.sampled_from(["a", "b", "c", "d", "e", "f", "g", "h"])
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.dictionaries(_IDS, st.floats(min_value=0.0, max_value=400.0),
+                       min_size=1, max_size=8),
+       st.floats(min_value=120.0, max_value=2000.0),
+       st.booleans())
+def test_weighted_split_conserves_budget(requests, budget, use_weights):
+    """Sum(grants) <= budget whenever the budget covers the floors, for
+    any request mix, with and without explicit weights."""
+    floor, ceil = 50.0, 330.0
+    weights = ({k: (i % 3) * 1.0 for i, k in enumerate(sorted(requests))}
+               if use_weights else None)
+    grants = weighted_split(requests, budget, floor=floor, ceil=ceil,
+                            weights=weights)
+    assert set(grants) == set(requests)
+    for k, g in grants.items():
+        assert floor - 1e-9 <= g <= ceil + 1e-9
+        assert g <= max(min(max(requests[k], floor), ceil), floor) + 1e-9
+    if budget >= floor * len(requests):
+        assert sum(grants.values()) <= budget + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.dictionaries(_IDS, st.floats(min_value=50.0, max_value=330.0),
+                       min_size=1, max_size=8),
+       st.floats(min_value=400.0, max_value=3000.0))
+def test_weighted_split_grants_requests_that_fit(requests, budget):
+    if sum(requests.values()) <= budget:
+        assert weighted_split(requests, budget, floor=50.0,
+                              ceil=330.0) == requests
+
+
+def test_weighted_split_zero_weight_stays_at_floor():
+    grants = weighted_split({"hungry": 330.0, "idle": 330.0}, 400.0,
+                            floor=50.0, ceil=330.0,
+                            weights={"hungry": 1.0, "idle": 0.0})
+    assert grants["idle"] == pytest.approx(50.0)
+    assert grants["hungry"] == pytest.approx(330.0)   # saturates at ceil
+
+
+def test_weighted_split_waterfills_saturated_consumers():
+    # equal weights would hand each 130 W above floor, but "small" can
+    # only use 60 W of it; the excess re-flows to "big" (water-filling)
+    grants = weighted_split({"big": 330.0, "small": 110.0}, 360.0,
+                            floor=50.0, ceil=330.0,
+                            weights={"big": 1.0, "small": 1.0})
+    assert grants["small"] == pytest.approx(110.0)
+    assert grants["big"] == pytest.approx(250.0)
+    assert sum(grants.values()) == pytest.approx(360.0)
+
+
+def test_weighted_split_default_weights_match_arbiter_proportional():
+    # default weights = headroom: proportional-above-floor, the historical
+    # PodPowerArbiter behavior
+    req = {"a": 330.0, "b": 330.0, "c": 150.0}
+    grants = weighted_split(req, 600.0, floor=50.0, ceil=330.0)
+    assert grants == PodPowerArbiter(budget_w=600.0).split(req)
+    spread = sum(req.values()) - 3 * 50.0
+    for k in req:
+        assert grants[k] == pytest.approx(
+            50.0 + (req[k] - 50.0) * (600.0 - 150.0) / spread)
+
+
+# ---------------------------------------------------------------------------
+# fleet grant ceiling (PowerManager.cap_limit)
+# ---------------------------------------------------------------------------
+
+def test_set_grant_clamps_applied_caps():
+    b = SimulatedBackend()
+    pm = PowerManager(tasks=paper_calibrated_tasks(), backend=b)
+    want = pm.schedule.cap_for("zgemm_ts64")
+    pm.set_grant(want - 60.0)
+    assert pm.next_cap("zgemm_ts64") == pytest.approx(want - 60.0)
+    with pm.phase("zgemm_ts64") as rec:
+        pass
+    assert rec.cap == pytest.approx(want - 60.0)
+    assert b.current_cap == pytest.approx(want - 60.0)
+    pm.set_grant(None)                      # cleared: schedule cap again
+    assert pm.next_cap("zgemm_ts64") == want
 
 
 # ---------------------------------------------------------------------------

@@ -281,3 +281,31 @@ def test_request_exceeding_max_seq_rejected():
     with pytest.raises(ValueError, match="exceeds"):
         eng.generate([Request(uid=0, prompt=[1, 2, 3, 4, 5],
                               max_new_tokens=6)])
+
+
+def test_stepwise_api_matches_generate():
+    """start()/step()-while-pending is the same loop generate() runs:
+    token-for-token identical output, and each step returns exactly the
+    requests that finished on it."""
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+
+    def reqs():
+        return [Request(uid=i, prompt=list(p), max_new_tokens=n)
+                for i, (p, n) in enumerate(zip(MIXED_PROMPTS, MIXED_NEW))]
+
+    ref = {r.uid: r.generated
+           for r in ServeEngine(cfg, run, ctx, params, batch_size=3,
+                                max_seq=32, decode_chunk=4).generate(reqs())}
+
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=3, max_seq=32,
+                      decode_chunk=4)
+    eng.start(reqs())
+    per_step = []
+    while eng.pending:
+        per_step.append(eng.step())
+    assert not eng.pending and eng.step() == []   # idempotent when drained
+    got = {r.uid: r.generated for r in eng.finished}
+    assert got == ref
+    assert sum(len(s) for s in per_step) == len(ref)
+    assert [r.uid for s in per_step for r in s] == \
+        [r.uid for r in eng.finished]

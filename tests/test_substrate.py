@@ -12,8 +12,8 @@ import numpy as np
 import pytest
 
 from repro.ckpt import checkpoint
-from repro.core import (CapSchedule, PowerSteeringController, SteeringGoal,
-                        Task, measure_sweep)
+from repro.core import Task, measure_sweep
+from repro.power import CapSchedule, PowerGoal, PowerManager
 from repro.data.pipeline import DataConfig, Prefetcher, TokenSource
 from repro.hw.tpu import DEFAULT_CHIP, DEFAULT_SUPERCHIP
 from repro.optim import AdamW, Adafactor, clip_by_global_norm, warmup_cosine
@@ -245,24 +245,34 @@ def lsms_table():
 
 def test_controller_matches_metric_argmins(lsms_table):
     from repro.core import ed_optimal_cap, sed_optimal_cap
-    ctrl = PowerSteeringController(DEFAULT_SUPERCHIP)
     for metric, pick in (("sed", sed_optimal_cap), ("ed", ed_optimal_cap)):
-        for d in ctrl.decide(lsms_table, SteeringGoal(metric=metric)):
+        pm = PowerManager(lsms_table, metric=metric, spec=DEFAULT_SUPERCHIP)
+        for d in pm.decide():
             assert d.cap == pick(lsms_table, d.task)
 
 
 def test_goal_filter_runtime_constraint(lsms_table):
-    ctrl = PowerSteeringController(DEFAULT_SUPERCHIP)
-    goal = SteeringGoal(metric="ed", max_runtime_increase_pct=5.0)
-    for d in ctrl.decide(lsms_table, goal):
+    goal = PowerGoal(metric="ed", max_runtime_increase_pct=5.0)
+    pm = PowerManager(lsms_table, goal=goal, spec=DEFAULT_SUPERCHIP)
+    for d in pm.decide():
         assert d.runtime_increase_pct <= 5.0 + 1e-9
 
 
 def test_goal_filter_unsatisfiable_stays_uncapped(lsms_table):
-    ctrl = PowerSteeringController(DEFAULT_SUPERCHIP)
-    goal = SteeringGoal(metric="ed", min_energy_saving_pct=99.0)
-    for d in ctrl.decide(lsms_table, goal):
+    goal = PowerGoal(metric="ed", min_energy_saving_pct=99.0)
+    pm = PowerManager(lsms_table, goal=goal, spec=DEFAULT_SUPERCHIP)
+    for d in pm.decide():
         assert d.cap == DEFAULT_SUPERCHIP.p_default
+
+
+def test_steering_shim_retired_with_pointer():
+    """The one-release tombstone: importing the removed module (or its
+    names from repro.core) must point at repro.power."""
+    with pytest.raises(ImportError, match="moved to\\s+repro.power"):
+        import repro.core.steering  # noqa: F401
+    import repro.core as core
+    with pytest.raises(AttributeError, match="repro.power"):
+        core.PowerSteeringController  # noqa: B018
 
 
 def test_cap_schedule_transitions_coalesce():
