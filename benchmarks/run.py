@@ -7,7 +7,7 @@ import sys
 import traceback
 
 from benchmarks import (cell_caps, fig1_power_trace, fig2_sed_sweep,
-                        fig3_ed_sweep, fleet_power, roofline,
+                        fig3_ed_sweep, fleet_power, migration, roofline,
                         serving_throughput, steering_policy,
                         table1_task_profile, table2_optimal_caps)
 
@@ -22,6 +22,7 @@ BENCHES = [
     ("cell_caps", cell_caps),
     ("serve", serving_throughput),
     ("fleet", fleet_power),
+    ("migrate", migration),
 ]
 
 

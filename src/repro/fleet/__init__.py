@@ -12,11 +12,15 @@ simulated multi-node, multi-job cluster —
                  each node's reported marginal-perf-per-watt sensitivity
                  (built on repro.power.weighted_split)
   scheduler.py   Job protocol + TrainJob / ServeJob + FleetScheduler:
-                 power-aware placement, preemption (train checkpoints
-                 first) and backoff-gated resume via StepwiseSupervisor
+                 power-aware placement, value-ordered preemption (cheapest
+                 token shed first), backoff-gated resume via
+                 StepwiseSupervisor, and lossless serve migration — a
+                 preempted ServeJob drains its engine into portable
+                 SlotSnapshots and restores them on whichever node it
+                 resumes on (cross-node transfers charged on the clock)
   telemetry.py   FleetTelemetry: per-node samples -> fleet counters
-                 (tokens, joules, grants, violations) for the re-decide
-                 loop and BENCH_fleet.json
+                 (tokens, joules, grants, violations, migrated vs dropped
+                 tokens) for the re-decide loop and BENCH_fleet.json
 
 Quick start::
 

@@ -168,18 +168,31 @@ class FleetNode:
         s, _ = self.step_cost(grant_w)
         return self.job.tokens_per_step() / s if s > 0 else 0.0
 
+    @property
+    def job_value(self) -> float:
+        """Worth of one of this node's tokens in the fleet objective."""
+        return float(getattr(self.job, "value", 1.0)) \
+            if self.job is not None else 0.0
+
+    def weighted_throughput_at(self, grant_w: float) -> float:
+        """Value-weighted modeled tokens/s — the unit the controller's
+        transfer objective maximizes, so a watt buys weighted tokens and
+        a high-value serve token outranks a background train token."""
+        return self.job_value * self.throughput_at(grant_w)
+
     def sensitivity(self, delta_w: float = 8.0) -> float:
-        """Marginal perf-per-watt at the current grant: the finite
-        difference of the modeled throughput curve.  This is what the
-        node 'reports' to the fleet controller."""
+        """Marginal weighted-perf-per-watt at the current grant: the
+        finite difference of the value-weighted modeled throughput
+        curve.  This is what the node 'reports' to the fleet
+        controller."""
         if self.job is None:
             return 0.0
         hi = min(self.grant_w + delta_w, self.ceil_w)
         lo = max(self.grant_w - delta_w, self.floor_w)
         if hi <= lo:
             return 0.0
-        return max(0.0, (self.throughput_at(hi) - self.throughput_at(lo))
-                   / (hi - lo))
+        return max(0.0, (self.weighted_throughput_at(hi)
+                         - self.weighted_throughput_at(lo)) / (hi - lo))
 
     # -- execution ----------------------------------------------------------
     def run_quantum(self, until: float) -> NodeSample | None:
@@ -209,7 +222,7 @@ class FleetNode:
                 # at f_min and the draw exceeds what was granted
                 if m.avg_power > self.grant_w + 1.0:
                     violations += 1
-            tokens += self.job.advance(step_s)
+            tokens += self.job.advance(step_s, now=self.local_t + step_s)
             steps += 1
             energy += step_j
             self.local_t += step_s
@@ -228,21 +241,33 @@ class SimulatedCluster:
     ``run(jobs, budget, until_s)`` drives the whole control loop each
     quantum: release finished jobs, reconcile placement against the
     current envelope (``FleetScheduler.tick`` — admissions, preemptions,
-    resumes), re-decide grants (``FleetPowerController.redistribute``,
-    conservation asserted per allocation), then let every busy node
-    execute its steps on the shared clock.
+    resumes — with cross-node snapshot migrations charged at
+    ``snapshot_bytes / interconnect_bw`` on the receiving node's clock),
+    re-decide grants (``FleetPowerController.redistribute``, conservation
+    asserted per allocation), then let every busy node execute its steps
+    on the shared clock.
+
+    ``cabinet_ceil_w`` (scalar, or ``{cabinet: watts}``) gives cabinets
+    real busbar/cooling ceilings enforced as a middle ``weighted_split``
+    level in the controller — not just roll-up accounting.
     """
 
     def __init__(self, n_nodes: int, cabinet_size: int = 4,
                  spec: SuperchipSpec = DEFAULT_SUPERCHIP,
                  metric: str = "sed", policy: str = "sensitivity",
                  quantum_s: float = 1.0,
-                 useful_margin_w: float = USEFUL_MARGIN_W):
+                 useful_margin_w: float = USEFUL_MARGIN_W,
+                 cabinet_ceil_w=None, interconnect_bw: float | None = None):
         if n_nodes < 1:
             raise ValueError("need at least one node")
         self.spec = spec
         self.quantum_s = quantum_s
         self.useful_margin_w = useful_margin_w
+        self.cabinet_ceil_w = cabinet_ceil_w
+        # snapshot-migration bandwidth: the chip's ICI link rate unless
+        # the deployment says otherwise
+        self.interconnect_bw = (interconnect_bw if interconnect_bw
+                                else spec.chip.ici_bandwidth)
         self.nodes = [
             FleetNode(name=f"cab{i // cabinet_size}/n{i:02d}",
                       cabinet=f"cab{i // cabinet_size}", spec=spec,
@@ -260,6 +285,23 @@ class SimulatedCluster:
 
     def busy_nodes(self) -> list[FleetNode]:
         return [n for n in self.nodes if n.busy]
+
+    # -- migration cost model ------------------------------------------------
+    def migration_seconds(self, nbytes: float) -> float:
+        """Virtual seconds a cross-node snapshot transfer occupies the
+        receiving node: payload bytes over the interconnect bandwidth."""
+        return float(nbytes) / self.interconnect_bw if nbytes > 0 else 0.0
+
+    def cabinet_ceils(self, nodes) -> dict[str, float] | None:
+        """Busbar/cooling ceilings for the cabinets hosting ``nodes``
+        (None = cabinets are roll-up accounting only)."""
+        if self.cabinet_ceil_w is None:
+            return None
+        cabs = sorted({n.cabinet for n in nodes})
+        if isinstance(self.cabinet_ceil_w, dict):
+            return {c: float(self.cabinet_ceil_w[c]) for c in cabs
+                    if c in self.cabinet_ceil_w}
+        return {c: float(self.cabinet_ceil_w) for c in cabs}
 
     # -- the control loop ---------------------------------------------------
     def run(self, jobs: Iterable[Job], budget, until_s: float) -> dict:
@@ -282,6 +324,12 @@ class SimulatedCluster:
             events = sched.tick(now, self, budget_w)
             for _ in events["preempted"]:
                 self.telemetry.record_preemption()
+            if events["dropped_tokens"]:
+                self.telemetry.record_drop(events["dropped_tokens"])
+            if events["kept_tokens"]:
+                self.telemetry.record_kept(events["kept_tokens"])
+            for m in events["migrations"]:
+                self.telemetry.record_migration(m["bytes"], m["seconds"])
 
             busy = self.busy_nodes()
             if not busy and not sched.has_work:
@@ -289,7 +337,9 @@ class SimulatedCluster:
 
             # 3. re-decide grants (hierarchical, conservation asserted)
             if busy:
-                alloc = self.controller.redistribute(budget_w, busy, t=now)
+                alloc = self.controller.redistribute(
+                    budget_w, busy, t=now,
+                    cabinet_ceils=self.cabinet_ceils(busy))
                 self.allocations.append(alloc)
                 self.telemetry.record_grants(alloc.node_w)
                 for node in busy:

@@ -51,21 +51,28 @@ class FleetAllocation:
     cabinet_w: dict[str, float]
     node_w: dict[str, float]
     sensitivities: dict[str, float]
+    cabinet_ceils: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def assert_conserved(self, floors: dict[str, float],
                          tol: float = 1e-6) -> None:
         """Sum(child grants) <= parent budget at every level — unless the
-        budget is below the physical floors, where the floors win."""
+        budget is below the physical floors, where the floors win.  A
+        cabinet with a busbar/cooling ceiling additionally holds its
+        roll-up at or below that ceiling (again, floors excepted)."""
         total = sum(self.node_w.values())
         if self.facility_w >= sum(floors.values()) - tol:
             assert total <= self.facility_w + tol, \
                 (total, self.facility_w)
-        roll = {}
+        roll, cab_floor = {}, {}
         for node, w in self.node_w.items():
             cab = node.split("/")[0]
             roll[cab] = roll.get(cab, 0.0) + w
+            cab_floor[cab] = cab_floor.get(cab, 0.0) + floors[node]
         for cab, w in roll.items():
             assert abs(self.cabinet_w[cab] - w) <= tol, (cab, w)
+            if cab in self.cabinet_ceils:
+                limit = max(self.cabinet_ceils[cab], cab_floor[cab])
+                assert w <= limit + tol, (cab, w, limit)
 
 
 class FleetPowerController:
@@ -91,26 +98,27 @@ class FleetPowerController:
         self.allocations = 0
 
     # -- the re-decide entry point ----------------------------------------
-    def redistribute(self, budget_w: float, nodes: list,
-                     t: float = 0.0) -> FleetAllocation:
+    def redistribute(self, budget_w: float, nodes: list, t: float = 0.0,
+                     cabinet_ceils: "dict[str, float] | None" = None,
+                     ) -> FleetAllocation:
         """Split ``budget_w`` across busy ``nodes`` (FleetNode-likes
-        exposing name/cabinet/floor_w/ceil_w/request_w()/throughput_at())."""
+        exposing name/cabinet/floor_w/ceil_w/request_w()/throughput_at(),
+        optionally weighted_throughput_at() for token-value weighting).
+
+        ``cabinet_ceils`` maps cabinets to busbar/cooling limits: when
+        given, allocation runs through a middle ``weighted_split`` level
+        (facility -> cabinet budgets -> node grants) and no cabinet's
+        roll-up ever exceeds its ceiling — enforcement, not accounting."""
         self.allocations += 1
         if not nodes:
             return FleetAllocation(t, budget_w, {}, {}, {})
         nodes = sorted(nodes, key=lambda n: n.name)
         floors = {n.name: n.floor_w for n in nodes}
+        ceils = dict(cabinet_ceils) if cabinet_ceils else {}
         if self.policy == "even":
-            # static even split, blind to requests and sensitivities —
-            # but still conserving: an equal-weight water-fill against
-            # each node's HARDWARE ceiling only, so heterogeneous floors
-            # can't push the sum past the budget
-            grants = weighted_split(
-                {n.name: n.ceil_w for n in nodes}, budget_w,
-                floor=floors, ceil={n.name: n.ceil_w for n in nodes},
-                weights={n.name: 1.0 for n in nodes})
+            grants = self._even(budget_w, nodes, floors, ceils)
         else:
-            grants = self._steer(budget_w, nodes, floors)
+            grants = self._steer(budget_w, nodes, floors, ceils)
         cabinets: dict[str, float] = {}
         for n in nodes:
             cabinets[n.cabinet] = cabinets.get(n.cabinet, 0.0) \
@@ -118,35 +126,126 @@ class FleetPowerController:
         alloc = FleetAllocation(
             t=t, facility_w=budget_w, cabinet_w=cabinets, node_w=grants,
             sensitivities={n.name: n.sensitivity() for n in nodes}
-            if self.policy == "sensitivity" else {})
+            if self.policy == "sensitivity" else {},
+            cabinet_ceils=ceils)
         alloc.assert_conserved(floors)
         return alloc
 
+    # -- the middle level: facility -> cabinet budgets ---------------------
+    @staticmethod
+    def _cabinet_budgets(budget_w: float, nodes: list,
+                         floors: dict[str, float],
+                         cab_ceils: dict[str, float],
+                         node_req: dict[str, float],
+                         ) -> tuple[dict[str, float], dict[str, list]]:
+        """Water-fill the facility budget over cabinets: each cabinet
+        requests the sum of its nodes' requests, floored at the sum of
+        their physical floors and ceilinged at min(busbar/cooling limit,
+        sum of hardware ceilings).  A ceiling below the floors cannot be
+        met — the floors win, as everywhere else in the stack."""
+        by_cab: dict[str, list] = {}
+        for n in nodes:
+            by_cab.setdefault(n.cabinet, []).append(n)
+        cab_req = {c: sum(node_req[n.name] for n in ns)
+                   for c, ns in by_cab.items()}
+        cab_floor = {c: sum(floors[n.name] for n in ns)
+                     for c, ns in by_cab.items()}
+        cab_ceil = {c: min(cab_ceils.get(c, float("inf")),
+                           sum(n.ceil_w for n in ns))
+                    for c, ns in by_cab.items()}
+        cab_ceil = {c: max(cab_ceil[c], cab_floor[c]) for c in cab_ceil}
+        budgets = weighted_split(cab_req, budget_w, floor=cab_floor,
+                                 ceil=cab_ceil,
+                                 weights={c: 1.0 for c in cab_req})
+        return budgets, by_cab
+
+    # -- the even baseline -------------------------------------------------
+    def _even(self, budget_w: float, nodes: list,
+              floors: dict[str, float],
+              cab_ceils: dict[str, float]) -> dict[str, float]:
+        """Static even split, blind to requests and sensitivities — but
+        still conserving: an equal-weight water-fill against each node's
+        HARDWARE ceiling only, so heterogeneous floors can't push the sum
+        past the budget.  With cabinet ceilings the same split runs per
+        cabinet inside the middle-level budgets."""
+        hw_ceil = {n.name: n.ceil_w for n in nodes}
+        if not cab_ceils:
+            return weighted_split(hw_ceil, budget_w, floor=floors,
+                                  ceil=hw_ceil,
+                                  weights={k: 1.0 for k in hw_ceil})
+        budgets, by_cab = self._cabinet_budgets(budget_w, nodes, floors,
+                                                cab_ceils, hw_ceil)
+        grants: dict[str, float] = {}
+        for cab in sorted(by_cab):
+            ns = by_cab[cab]
+            grants.update(weighted_split(
+                {n.name: n.ceil_w for n in ns}, budgets[cab],
+                floor={n.name: floors[n.name] for n in ns},
+                ceil={n.name: n.ceil_w for n in ns},
+                weights={n.name: 1.0 for n in ns}))
+        return grants
+
     # -- sensitivity steering ---------------------------------------------
     def _steer(self, budget_w: float, nodes: list,
-               floors: dict[str, float]) -> dict[str, float]:
+               floors: dict[str, float],
+               cab_ceils: dict[str, float]) -> dict[str, float]:
         by_name = {n.name: n for n in nodes}
         requests = {n.name: n.request_w() for n in nodes}
         ceils = {n.name: min(requests[n.name], n.ceil_w) for n in nodes}
-        # equal-weight water-fill: every node gets at least
-        # min(budget/n, request); slack from saturated (low-request)
-        # nodes re-flows instead of stranding
-        grants = weighted_split(requests, budget_w, floor=floors,
-                                ceil=ceils,
-                                weights={k: 1.0 for k in requests})
+        if not cab_ceils:
+            # equal-weight water-fill: every node gets at least
+            # min(budget/n, request); slack from saturated (low-request)
+            # nodes re-flows instead of stranding
+            grants = weighted_split(requests, budget_w, floor=floors,
+                                    ceil=ceils,
+                                    weights={k: 1.0 for k in requests})
+        else:
+            # middle level first: cabinet budgets under their busbar
+            # ceilings, then the same water-fill within each cabinet
+            budgets, by_cab = self._cabinet_budgets(budget_w, nodes,
+                                                    floors, cab_ceils,
+                                                    requests)
+            grants = {}
+            for cab in sorted(by_cab):
+                ns = by_cab[cab]
+                grants.update(weighted_split(
+                    {n.name: requests[n.name] for n in ns}, budgets[cab],
+                    floor={n.name: floors[n.name] for n in ns},
+                    ceil={n.name: ceils[n.name] for n in ns},
+                    weights={n.name: 1.0 for n in ns}))
 
         # greedy marginal refinement: move transfer_w from the donor with
-        # the smallest throughput loss to the recipient with the largest
-        # gain while the move buys fleet tokens/s.  Modeled throughput is
-        # monotone in the grant, so every accepted move improves on the
-        # water-fill (and hence on the even split).
+        # the smallest weighted-throughput loss to the recipient with the
+        # largest gain while the move buys weighted fleet tokens/s (the
+        # token-value objective: a serve token is worth its job's
+        # ``value``, not 1).  Modeled throughput is monotone in the
+        # grant, so every accepted move improves on the water-fill (and
+        # hence on the even split).  With cabinet ceilings, a transfer
+        # whose recipient cabinet is at its busbar limit is skipped —
+        # watts only flow along links with headroom.
         dw = self.transfer_w
+        cab_of = {n.name: n.cabinet for n in nodes}
+        cab_total: dict[str, float] = {}
+        for k, g in grants.items():
+            cab_total[cab_of[k]] = cab_total.get(cab_of[k], 0.0) + g
+        cab_floor: dict[str, float] = {}
+        for k in grants:
+            cab_floor[cab_of[k]] = cab_floor.get(cab_of[k], 0.0) + floors[k]
+
+        def cab_headroom(cab: str) -> float:
+            if cab not in cab_ceils:
+                return float("inf")
+            return max(cab_ceils[cab], cab_floor[cab]) - cab_total[cab]
+
         cache: dict[tuple[str, float], float] = {}
 
         def thr(name: str, g: float) -> float:
             key = (name, round(g, 6))
             if key not in cache:
-                cache[key] = by_name[name].throughput_at(g)
+                node = by_name[name]
+                fn = getattr(node, "weighted_throughput_at", None)
+                cache[key] = fn(g) if fn is not None \
+                    else node.throughput_at(g)
             return cache[key]
 
         for _ in range(self.rounds_per_node * len(nodes)):
@@ -159,9 +258,17 @@ class FleetPowerController:
                         best_gain, recipient = gain, k
             if recipient is None:
                 break
+            # a SAME-cabinet donor leaves the roll-up unchanged, so a
+            # saturated busbar still allows rebalancing within the
+            # cabinet; only a cross-cabinet move needs recipient-side
+            # cabinet headroom
+            rcab = cab_of[recipient]
+            cross_ok = cab_headroom(rcab) >= dw
             best_loss, donor = float("inf"), None
             for k in sorted(grants):
                 if k == recipient or grants[k] - dw < floors[k]:
+                    continue
+                if cab_of[k] != rcab and not cross_ok:
                     continue
                 loss = thr(k, grants[k]) - thr(k, grants[k] - dw)
                 if loss < best_loss - 1e-12:
@@ -170,4 +277,6 @@ class FleetPowerController:
                 break
             grants[recipient] += dw
             grants[donor] -= dw
+            cab_total[cab_of[recipient]] += dw
+            cab_total[cab_of[donor]] -= dw
         return grants

@@ -42,6 +42,9 @@ class Job(Protocol):
 
     name: str
     kind: str           # "train" | "serve"
+    value: float        # worth of one of this job's tokens in the fleet
+                        # objective (weighted tokens/s) and the
+                        # preemption order — low value is shed first
 
     @property
     def done(self) -> bool:
@@ -61,14 +64,20 @@ class Job(Protocol):
     def tokens_per_step(self) -> int:
         ...
 
-    def advance(self, step_s: float) -> int:
-        """Commit one executed step (``step_s`` modeled seconds); returns
-        the tokens actually emitted."""
+    def advance(self, step_s: float, now: float | None = None) -> int:
+        """Commit one executed step (``step_s`` modeled seconds, ending
+        at virtual time ``now`` when the caller tracks one); returns the
+        tokens actually emitted."""
         ...
 
     def preempt(self) -> float:
         """Cooperative preemption; returns the backoff delay (virtual
-        seconds) before the job may be re-placed."""
+        seconds) before the job may be re-placed.  Afterwards the job
+        reports what the preemption cost through three accounting
+        attributes: ``last_preempt_dropped`` (tokens of work destroyed —
+        to be redone), ``snapshot_tokens``/``snapshot_bytes`` (in-flight
+        tokens preserved in a portable snapshot and the on-wire size a
+        cross-node resume must move)."""
         ...
 
 
@@ -92,12 +101,17 @@ class TrainJob:
     chips: int = 1
     step_fn: object = None         # Optional[Callable[[int], None]]
     max_restarts: int = 8
+    value: float = 1.0
     kind: str = dataclasses.field(default="train", init=False)
     steps_done: int = dataclasses.field(default=0, init=False)
 
     def __post_init__(self):
         self.supervisor = StepwiseSupervisor(max_restarts=self.max_restarts)
         self._tasks: list[Task] | None = None
+        self.last_preempt_dropped = 0   # tokens rolled back at last preempt
+        self.dropped_total = 0          # cumulative rolled-back tokens
+        self.snapshot_tokens = 0        # training migrates via checkpoint,
+        self.snapshot_bytes = 0         # not via live state: always 0
 
     @property
     def done(self) -> bool:
@@ -116,7 +130,7 @@ class TrainJob:
     def tokens_per_step(self) -> int:
         return self.batch * self.seq
 
-    def advance(self, step_s: float) -> int:
+    def advance(self, step_s: float, now: float | None = None) -> int:
         if self.step_fn is not None:
             self.step_fn(self.steps_done)
         self.steps_done += 1
@@ -125,7 +139,10 @@ class TrainJob:
     def preempt(self) -> float:
         # roll back to the last checkpoint boundary: the un-checkpointed
         # tail is re-run after resume, as with a real restart
-        self.steps_done -= self.steps_done % self.ckpt_every
+        rolled = self.steps_done % self.ckpt_every
+        self.steps_done -= rolled
+        self.last_preempt_dropped = rolled * self.tokens_per_step()
+        self.dropped_total += self.last_preempt_dropped
         return self.supervisor.preempted()
 
 
@@ -138,13 +155,29 @@ class ServeJob:
     ``engine`` optionally carries a real ``ServeEngine``; the job then
     drives it through ``start()``/``step()`` so each fleet step performs
     one actual admission round + decode chunk, and token counts come from
-    the engine instead of the model.  Serving holds no checkpoint: a
-    preemption drops in-flight state, gives the lost (partial) tokens
-    back out of ``emitted``, and the resumed stint re-``start``s with
-    only the not-yet-finished requests, their partial output reset.
-    Fleet telemetry counts EXECUTED tokens, so regenerated work appears
-    twice there — exactly as a rolled-back TrainJob re-executes (and
-    re-counts) its un-checkpointed steps."""
+    the engine instead of the model.
+
+    Preemption (``migrate=True``, the default) is a DRAIN, not a
+    discard: the engine exports every in-flight request as a portable
+    ``SlotSnapshot`` (``engine.drain()``), the job re-queues carrying the
+    snapshots, and the resumed stint ``restore``s them — on the same node
+    or any other whose engine accepts the payload — continuing each
+    stream bit-identically.  ``snapshot_bytes`` is what a cross-node
+    resume must move over the interconnect; the cluster charges that
+    transfer on the virtual clock.  With ``migrate=False`` (the PR-3
+    drop-and-restart baseline) a preemption destroys in-flight state:
+    the lost tokens are refunded out of ``emitted``, reported through
+    ``last_preempt_dropped``, and regenerated by the resumed stint.
+    Fleet telemetry counts EXECUTED tokens, so dropped work appears
+    twice there — exactly as a rolled-back TrainJob re-executes its
+    un-checkpointed steps.
+
+    Without an engine the same economics are modeled: requests advance
+    in waves of ``batch`` concurrent streams; the tokens into the
+    current wave are the in-flight state a drop destroys and a
+    migration preserves (snapshot size from the analytic KV-cache bytes
+    model).  Wave completion times against the virtual clock feed
+    ``request_latencies`` — the p50/p99 the migration benchmark reports."""
 
     name: str
     cfg: object                    # repro.configs.base.ModelConfig
@@ -157,6 +190,8 @@ class ServeJob:
     engine: object = None          # Optional[repro.serving.engine.ServeEngine]
     requests: list = None          # real-engine mode: the stream to serve
     max_restarts: int = 8
+    value: float = 1.0
+    migrate: bool = True
     kind: str = dataclasses.field(default="serve", init=False)
     emitted: int = dataclasses.field(default=0, init=False)
 
@@ -164,6 +199,14 @@ class ServeJob:
         self.supervisor = StepwiseSupervisor(max_restarts=self.max_restarts)
         self._tasks: list[Task] | None = None
         self._started = False
+        self._snapshots: list | None = None   # drained SlotSnapshots
+        self._delivered_seen = 0
+        self._wave_start: float | None = None
+        self.request_latencies: list[float] = []
+        self.last_preempt_dropped = 0
+        self.dropped_total = 0
+        self.snapshot_tokens = 0
+        self.snapshot_bytes = 0
 
     @property
     def total_tokens(self) -> int:
@@ -192,37 +235,118 @@ class ServeJob:
     def tokens_per_step(self) -> int:
         return self.batch * self.decode_chunk
 
-    def advance(self, step_s: float) -> int:
+    # -- modeled wave accounting (engine=None mode) -------------------------
+    @property
+    def _wave_tokens(self) -> int:
+        return self.batch * self.new_tokens
+
+    def _requests_completed(self, emitted: int) -> int:
+        """Requests fully served at ``emitted`` tokens: waves of ``batch``
+        concurrent streams complete together (the final wave may be
+        short)."""
+        if emitted >= self.total_tokens:
+            return self.total_requests
+        return (emitted // self._wave_tokens) * self.batch
+
+    def _in_flight_modeled(self) -> int:
+        """Tokens generated for requests not yet complete — the state a
+        drop destroys and a migration preserves."""
+        return self.emitted \
+            - self._requests_completed(self.emitted) * self.new_tokens
+
+    def _modeled_snapshot_bytes(self, in_flight: int) -> int:
+        """Analytic on-wire size of the in-flight wave's cache state
+        (the engineless analogue of summing SlotSnapshot payloads)."""
+        if in_flight <= 0:
+            return 0
+        from repro.hw import flops as F
+        depth = self.prompt + in_flight // max(self.batch, 1)
+        return int(F._cache_bytes(self.cfg, self.batch, depth))
+
+    # -- execution ----------------------------------------------------------
+    def advance(self, step_s: float, now: float | None = None) -> int:
         if self.engine is not None:
             if not self._started:
-                # (re-)start the stint: only not-yet-finished requests go
-                # back in, and a request interrupted mid-generation is
-                # reset — its partial output was discarded with the
-                # preempted engine state and will be regenerated
-                todo = [r for r in (self.requests or []) if not r.done]
-                for r in todo:
-                    r.generated.clear()
-                self.engine.start(todo)
+                if self._snapshots is not None:
+                    # lossless resume: drained snapshots re-admit, on
+                    # whatever engine this job now fronts
+                    self.engine.restore(self._snapshots)
+                    self._snapshots = None
+                else:
+                    # fresh start, or drop-and-restart resume: only
+                    # not-yet-finished requests go back in, partial
+                    # output reset — it died with the discarded state
+                    todo = [r for r in (self.requests or []) if not r.done]
+                    for r in todo:
+                        r.generated.clear()
+                    self.engine.start(todo)
                 self._started = True
-            before = sum(len(r.generated) for r in self.engine.finished)
-            in_flight_before = self.engine.in_flight_tokens
+                # baseline AFTER (re)start: restored requests carry their
+                # preserved tokens in, cleared ones start over — either
+                # way only tokens delivered from here on count as fresh
+                self._delivered_seen = sum(
+                    len(r.generated) for r in (self.requests or []))
             self.engine.step()
-            fresh = (sum(len(r.generated) for r in self.engine.finished)
-                     - before) + (self.engine.in_flight_tokens
-                                  - in_flight_before)
+            delivered = sum(len(r.generated) for r in (self.requests or []))
+            fresh = delivered - self._delivered_seen
+            self._delivered_seen = delivered
             self.emitted += fresh
             return fresh
+        if now is not None and self._wave_start is None \
+                and self.emitted < self.total_tokens:
+            self._wave_start = now - step_s
+        done_before = self._requests_completed(self.emitted)
         fresh = min(self.tokens_per_step(), self.total_tokens - self.emitted)
         self.emitted += fresh
+        newly = self._requests_completed(self.emitted) - done_before
+        if newly and now is not None:
+            start = self._wave_start if self._wave_start is not None \
+                else now - step_s
+            self.request_latencies.extend([now - start] * newly)
+            self._wave_start = now if self.emitted < self.total_tokens \
+                else None
         return fresh
 
     def preempt(self) -> float:
-        if self.engine is not None and self._started:
-            # in-flight generation is lost with the engine state; it was
-            # counted into ``emitted`` as it streamed, so give it back —
-            # the resumed stint regenerates (and re-counts) it
-            self.emitted -= self.engine.in_flight_tokens
-            self._started = False
+        self.last_preempt_dropped = 0
+        self.snapshot_tokens = self.snapshot_bytes = 0
+        if self.engine is not None:
+            if self._started:
+                if self.migrate:
+                    in_flight = self.engine.in_flight_tokens
+                    self._snapshots = self.engine.drain()
+                    self.snapshot_tokens = in_flight
+                    self.snapshot_bytes = sum(
+                        s.payload_bytes for s in self._snapshots)
+                else:
+                    # in-flight generation dies with the engine state; it
+                    # was counted into ``emitted`` as it streamed, so give
+                    # it back — the resumed stint regenerates it
+                    self.last_preempt_dropped = self.engine.in_flight_tokens
+                    self.emitted -= self.engine.in_flight_tokens
+                self._started = False
+            elif self._snapshots is not None:
+                # preempted again before the resumed stint ever stepped
+                # (e.g. the migration transfer ate the whole quantum):
+                # the held snapshots are still the preserved state —
+                # re-report them so kept-token/transfer accounting does
+                # not silently record zero for work that survives
+                self.snapshot_tokens = sum(
+                    len(s.request.generated) for s in self._snapshots
+                    if s.warm)
+                self.snapshot_bytes = sum(
+                    s.payload_bytes for s in self._snapshots)
+        else:
+            in_flight = self._in_flight_modeled()
+            if self.migrate:
+                self.snapshot_tokens = in_flight
+                self.snapshot_bytes = self._modeled_snapshot_bytes(in_flight)
+            else:
+                self.last_preempt_dropped = in_flight
+                self.emitted -= in_flight
+                # the wave restarts from scratch on resume; its requests'
+                # latency keeps counting from the original wave start
+        self.dropped_total += self.last_preempt_dropped
         return self.supervisor.preempted()
 
 
@@ -230,6 +354,8 @@ class ServeJob:
 class _Paused:
     job: Job
     eligible_at: float
+    origin: str = ""     # node the job was preempted from — resuming
+                         # elsewhere moves its snapshot (migration)
 
 
 class FleetScheduler:
@@ -261,25 +387,35 @@ class FleetScheduler:
 
     def tick(self, t: float, cluster, budget_w: float) -> dict:
         """One scheduling round; returns ``{"admitted": [...],
-        "preempted": [...]}`` (job names, deterministic order)."""
-        admitted, preempted = [], []
+        "preempted": [...], "migrations": [...], "dropped_tokens": N}``
+        (job names / migration records, deterministic order)."""
+        admitted, preempted, migrations = [], [], []
+        dropped_tokens = kept_tokens = 0
 
         # 1. preempt while the shrunken envelope can't float the busy set:
-        #    train jobs first (they checkpoint), then serve, LIFO each.
+        #    lowest token-value first (a background train token is shed
+        #    before a paid serve token), train before serve at equal
+        #    value (they checkpoint), LIFO each.
         busy = cluster.busy_nodes()
         while busy and len(busy) * self.min_node_w > budget_w:
             victims = sorted(
-                busy, key=lambda n: (n.job.kind != "train", -n.assigned_at,
+                busy, key=lambda n: (getattr(n.job, "value", 1.0),
+                                     n.job.kind != "train", -n.assigned_at,
                                      n.name))
             node = victims[0]
             job = node.release()
             backoff = job.preempt()
-            self.paused.append(_Paused(job, eligible_at=t + backoff))
+            dropped_tokens += getattr(job, "last_preempt_dropped", 0)
+            kept_tokens += getattr(job, "snapshot_tokens", 0)
+            self.paused.append(_Paused(job, eligible_at=t + backoff,
+                                       origin=node.name))
             preempted.append(job.name)
             busy = cluster.busy_nodes()
 
         # 2. resume eligible paused jobs ahead of fresh queue work
-        #    (oldest eligibility first, then name, for determinism)
+        #    (oldest eligibility first, then name, for determinism).  A
+        #    job carrying a snapshot that lands on a different node pays
+        #    the migration transfer on that node's clock.
         self.paused.sort(key=lambda p: (p.eligible_at, p.job.name))
         for p in list(self.paused):
             if p.eligible_at > t:
@@ -289,8 +425,21 @@ class FleetScheduler:
                                          budget_w):
                 break
             self.paused.remove(p)
-            free[0].assign(p.job, t)
+            node = free[0]
+            node.assign(p.job, t)
             admitted.append(p.job.name)
+            snap_bytes = getattr(p.job, "snapshot_bytes", 0)
+            if snap_bytes and node.name != p.origin:
+                mig_s = (cluster.migration_seconds(snap_bytes)
+                         if hasattr(cluster, "migration_seconds") else 0.0)
+                node.local_t += mig_s    # the transfer occupies the node
+                migrations.append({
+                    "job": p.job.name, "from": p.origin, "to": node.name,
+                    "tokens": getattr(p.job, "snapshot_tokens", 0),
+                    "bytes": snap_bytes, "seconds": mig_s})
+            if hasattr(p.job, "snapshot_bytes"):
+                p.job.snapshot_bytes = 0
+                p.job.snapshot_tokens = 0
 
         # 3. admit fresh jobs FCFS while nodes and watts allow
         while self.queue:
@@ -302,4 +451,6 @@ class FleetScheduler:
             free[0].assign(job, t)
             admitted.append(job.name)
 
-        return {"admitted": admitted, "preempted": preempted}
+        return {"admitted": admitted, "preempted": preempted,
+                "migrations": migrations, "dropped_tokens": dropped_tokens,
+                "kept_tokens": kept_tokens}

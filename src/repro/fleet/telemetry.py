@@ -50,6 +50,12 @@ class FleetTelemetry:
         self.cap_grants = 0          # grant (re-)allocations issued
         self.preemptions = 0
         self.completions = 0
+        # -- preemption economics: destroyed vs preserved work -------------
+        self.dropped_tokens = 0      # in-flight work destroyed (redone)
+        self.migrations = 0          # snapshot moved to a different node
+        self.migrated_tokens = 0     # in-flight work preserved by drains
+        self.migration_bytes = 0     # snapshot payload moved cross-node
+        self.migration_s = 0.0       # virtual seconds spent transferring
         self.by_kind: dict[str, dict[str, float]] = {}
 
     # -- feeds -------------------------------------------------------------
@@ -74,6 +80,24 @@ class FleetTelemetry:
     def record_preemption(self) -> None:
         self.preemptions += 1
 
+    def record_drop(self, tokens: int) -> None:
+        """In-flight work destroyed by a preemption (it will be redone
+        and re-counted — the double-pay the migration path avoids)."""
+        self.dropped_tokens += tokens
+
+    def record_kept(self, tokens: int) -> None:
+        """In-flight work preserved across a preemption by a portable
+        snapshot (drained, not discarded)."""
+        self.migrated_tokens += tokens
+
+    def record_migration(self, nbytes: int, seconds: float) -> None:
+        """A preserved snapshot resumed on a DIFFERENT node: ``nbytes``
+        moved over the interconnect, ``seconds`` of virtual transfer
+        time charged to the receiving node."""
+        self.migrations += 1
+        self.migration_bytes += nbytes
+        self.migration_s += seconds
+
     def record_completion(self) -> None:
         self.completions += 1
 
@@ -91,6 +115,11 @@ class FleetTelemetry:
             "cap_grants": self.cap_grants,
             "preemptions": self.preemptions,
             "completions": self.completions,
+            "dropped_tokens": self.dropped_tokens,
+            "migrations": self.migrations,
+            "migrated_tokens": self.migrated_tokens,
+            "migration_bytes": self.migration_bytes,
+            "migration_s": self.migration_s,
             "j_per_token": (self.energy_j / self.tokens
                             if self.tokens else 0.0),
             "by_kind": {k: dict(v) for k, v in sorted(self.by_kind.items())},

@@ -65,6 +65,28 @@ def kv_cache_update(k_cache, v_cache, k_new, v_new, index, *,
     return ref.kv_cache_update_ref(k_cache, v_cache, k_new, v_new, index)
 
 
+def slot_gather(a, slot, *, axis=1, mode="reference"):
+    """Lift one slot's lane out of a stacked cache leaf along ``axis``
+    (the batch/slot dim): (L, B, ...) -> (L, ...).  The export half of
+    portable slot state (``repro.models.lm.export_slot``).
+
+    Every mode routes to the XLA slice: this is one contiguous DMA with
+    no compute to fuse, which is exactly the case a hand Pallas kernel
+    cannot beat (unlike ``kv_cache_update``, whose per-slot scatter +
+    OOB-drop semantics XLA scatters handle poorly)."""
+    del mode
+    return ref.slot_gather_ref(a, slot, axis=axis)
+
+
+def slot_scatter(a, sub, slot, *, axis=1, mode="reference"):
+    """Install a lifted lane into a stacked cache leaf at ``slot`` along
+    ``axis`` — the import half of portable slot state.  Same
+    single-contiguous-DMA argument as ``slot_gather``: all modes route
+    to the XLA dynamic-update-slice."""
+    del mode
+    return ref.slot_scatter_ref(a, sub, slot, axis=axis)
+
+
 def ssd(x, dt, A, B, C, D=None, h0=None, *, chunk=128, mode="reference"):
     """Mamba-2 SSD scan. Returns (y, final_state)."""
     if mode in ("pallas", "pallas_interpret"):

@@ -144,6 +144,20 @@ def kv_cache_update_ref(k_cache, v_cache, k_new, v_new, index):
     return ck, cv
 
 
+def slot_gather_ref(a, slot, axis: int = 1):
+    """Lift one slot's lane out of a stacked cache leaf: drop ``axis``
+    (the batch/slot dim) at index ``slot``.  (L, B, ...) -> (L, ...)."""
+    return jax.lax.index_in_dim(a, slot, axis=axis, keepdims=False)
+
+
+def slot_scatter_ref(a, sub, slot, axis: int = 1):
+    """Install a lifted lane into a stacked cache leaf at index ``slot``
+    along ``axis`` (dtype-cast to the destination).  The inverse of
+    ``slot_gather_ref`` for matching trailing shapes."""
+    return jax.lax.dynamic_update_index_in_dim(
+        a, sub.astype(a.dtype), slot, axis=axis)
+
+
 # ===========================================================================
 # mamba-2 SSD (state-space duality)
 # ===========================================================================

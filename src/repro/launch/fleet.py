@@ -20,7 +20,8 @@ from repro.hw.tpu import DEFAULT_SUPERCHIP
 from repro.power import available_metrics
 
 
-def default_jobs(arch: str, n: int) -> list:
+def default_jobs(arch: str, n: int, serve_value: float = 1.0,
+                 migrate: bool = True) -> list:
     """A heterogeneous queue: compute-bound training, decode-heavy
     serving (memory-bound) and prefill-heavy serving, round-robin."""
     cfg = get_model_config(arch)
@@ -33,11 +34,13 @@ def default_jobs(arch: str, n: int) -> list:
         elif kind == 1:
             jobs.append(ServeJob(f"serve-decode-{i}", cfg, batch=64,
                                  prompt=2048, new_tokens=512,
-                                 total_requests=10**9, decode_chunk=32))
+                                 total_requests=10**9, decode_chunk=32,
+                                 value=serve_value, migrate=migrate))
         else:
             jobs.append(ServeJob(f"serve-prefill-{i}", cfg, batch=16,
                                  prompt=8192, new_tokens=32,
-                                 total_requests=10**9, decode_chunk=32))
+                                 total_requests=10**9, decode_chunk=32,
+                                 value=serve_value, migrate=migrate))
     return jobs
 
 
@@ -59,6 +62,15 @@ def main() -> None:
                     help="virtual seconds to simulate")
     ap.add_argument("--quantum", type=float, default=1.0,
                     help="control quantum (virtual s) between re-decides")
+    ap.add_argument("--serve-value", type=float, default=1.0,
+                    help="token value of serve jobs in the fleet objective "
+                         "and preemption order (train jobs stay at 1.0)")
+    ap.add_argument("--no-migrate", action="store_true",
+                    help="drop-and-restart preempted serve jobs instead of "
+                         "draining/restoring their slot snapshots")
+    ap.add_argument("--cabinet-ceil", type=float, default=None,
+                    help="busbar/cooling ceiling per cabinet (watts), "
+                         "enforced as a middle weighted_split level")
     args = ap.parse_args()
 
     p_max = args.nodes * DEFAULT_SUPERCHIP.p_max
@@ -69,9 +81,11 @@ def main() -> None:
     cluster = SimulatedCluster(
         n_nodes=args.nodes, cabinet_size=args.cabinet_size,
         metric=args.power_metric, policy=args.policy,
-        quantum_s=args.quantum)
+        quantum_s=args.quantum, cabinet_ceil_w=args.cabinet_ceil)
     jobs = default_jobs(args.arch, args.jobs
-                        if args.jobs is not None else args.nodes)
+                        if args.jobs is not None else args.nodes,
+                        serve_value=args.serve_value,
+                        migrate=not args.no_migrate)
     print(f"[fleet] {args.nodes} nodes / {args.policy} steering; budget "
           f"{' -> '.join(f'{w:.0f}W' for _, w in trace)} over "
           f"{args.duration:.0f}s")
@@ -84,6 +98,12 @@ def main() -> None:
     print(f"[fleet] {counters['cap_grants']} grants, "
           f"{counters['preemptions']} preemptions, "
           f"{counters['violations']} cap violations")
+    if counters["preemptions"]:
+        print(f"[preempt] {counters['migrated_tokens']} tokens migrated / "
+              f"{counters['dropped_tokens']} dropped; "
+              f"{counters['migrations']} cross-node transfers "
+              f"({counters['migration_bytes'] / 1e6:.1f} MB, "
+              f"{counters['migration_s'] * 1e3:.1f} ms on the wire)")
     if cluster.allocations:
         last = cluster.allocations[-1]
         print("[grants] " + ", ".join(

@@ -18,6 +18,11 @@ from repro.kernels import ops
 from repro.models.params import PD
 from repro.sharding.rules import LogicalRules, with_constraint
 
+try:                                   # jax >= 0.6 exports it at top level
+    _shard_map = jax.shard_map
+except AttributeError:                 # 0.4.x keeps it in experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 @dataclasses.dataclass(frozen=True)
 class Ctx:
@@ -321,7 +326,7 @@ def _decode_attention_seqsharded(ctx: Ctx, cfg: ModelConfig, q, cache,
         o = o / jnp.maximum(l, 1e-30)[..., None]
         return o.reshape(B_l, 1, H, hd).astype(c), ck, cv
 
-    out, ck, cv = jax.shard_map(
+    out, ck, cv = _shard_map(
         local_fn, mesh=mesh,
         in_specs=(rep_spec, cache_spec, cache_spec, rep_spec, rep_spec, P()),
         out_specs=(rep_spec, cache_spec, cache_spec),
@@ -574,7 +579,7 @@ def _moe_shard_map(ctx: Ctx, cfg: ModelConfig, p: dict, x, top_p, top_e):
                                  1, B_l * S_l)
         return y_l.reshape(B_l, S_l, -1)
 
-    y = jax.shard_map(
+    y = _shard_map(
         local_fn, mesh=mesh,
         in_specs=(tok_spec, tok_spec, tok_spec, w_spec, w_spec, w_spec),
         out_specs=tok_spec,

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models import layers as L
 from repro.models.params import PD
 
@@ -493,3 +494,120 @@ def cache_logical_axes(cfg: ModelConfig):
     if cfg.family == "hybrid":
         return {"mamba": L.MAMBA_STATE_AXES, "kv_shared": L.KV_CACHE_AXES}
     raise ValueError(cfg.family)
+
+
+# ===========================================================================
+# portable slot state
+# ===========================================================================
+#
+# Every decode-cache leaf is laid out (stack, B, ...): axis 0 is the layer
+# stack (n_layers, or n_super for the zamba2 shared-attention cache) and
+# axis 1 is the batch SLOT.  ``cache_slot_spec`` names, per top-level cache
+# key, what one slot's lane means; ``export_slot``/``import_slot`` lift a
+# lane out of one engine's cache and install it into another's — including
+# engines with different batch sizes (``max_slots``) and ``max_seq`` — so a
+# drained request travels as data instead of being regenerated.
+
+#: Slot semantics per cache kind: "rows" leaves carry sequence rows on
+#: axis 2, valid up to the slot's kv_len (attention masks the rest);
+#: "state" leaves carry the whole lane unconditionally (recurrent SSM /
+#: conv state has no row mask — it is the left context itself).
+SLOT_ROWS, SLOT_STATE = "rows", "state"
+
+
+def cache_slot_spec(cfg: ModelConfig) -> dict[str, str]:
+    """Per-top-level-key slot schema of ``init_cache``'s pytree."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.layer_pattern == "local_global":
+            return {"kv_local": SLOT_ROWS, "kv_global": SLOT_ROWS}
+        return {"kv": SLOT_ROWS}
+    if cfg.family == "ssm":
+        return {"mamba": SLOT_STATE}
+    if cfg.family == "hybrid":
+        return {"mamba": SLOT_STATE, "kv_shared": SLOT_ROWS}
+    raise ValueError(f"{cfg.family} has no decode cache (encoder-only)")
+
+
+def export_slot(cfg: ModelConfig, cache, slot: int, kv_len: int,
+                mode: str = "reference") -> dict:
+    """Lift slot ``slot``'s state out of a batched decode cache.
+
+    Returns a payload pytree mirroring the cache structure with the batch
+    axis removed: "rows" leaves are trimmed to ``kv_len`` valid rows
+    (the only rows attention can ever read at this fill), "state" leaves
+    travel whole.  The payload is engine-geometry-free — it can be
+    installed into any slot of any cache built from the same ``cfg``
+    whose ``max_seq`` accommodates the request (``import_slot``)."""
+    if kv_len < 0:
+        raise ValueError(f"kv_len must be >= 0, got {kv_len}")
+    spec = cache_slot_spec(cfg)
+    if set(spec) != set(cache):
+        raise ValueError(f"cache keys {sorted(cache)} do not match the "
+                         f"slot schema {sorted(spec)}")
+    payload = {}
+    for key, kind in spec.items():
+        lane = jax.tree.map(
+            lambda a: ops.slot_gather(a, slot, axis=1, mode=mode),
+            cache[key])
+        if kind == SLOT_ROWS:
+            if any(kv_len > a.shape[1] for a in jax.tree.leaves(lane)):
+                raise ValueError(f"kv_len {kv_len} exceeds the cache rows "
+                                 f"of {key}")
+            lane = jax.tree.map(lambda a: a[:, :kv_len], lane)
+        payload[key] = lane
+    return payload
+
+
+def import_slot(cfg: ModelConfig, cache, payload, slot: int,
+                mode: str = "reference"):
+    """Install an ``export_slot`` payload into slot ``slot`` of ``cache``.
+
+    "rows" leaves are zero-padded to the destination's ``max_seq`` and
+    the whole lane is overwritten (rows past the payload's kv_len are
+    masked by the per-slot kv_len until decode writes them); "state"
+    leaves overwrite the lane as-is.  The destination may have any batch
+    size and any ``max_seq`` >= the payload's kv_len.  Returns the
+    updated cache."""
+    spec = cache_slot_spec(cfg)
+    if set(spec) != set(payload) or set(spec) != set(cache):
+        raise ValueError(f"payload keys {sorted(payload)} do not match the "
+                         f"slot schema {sorted(spec)}")
+    new_cache = dict(cache)
+    for key, kind in spec.items():
+        sub = payload[key]
+        dst = cache[key]
+        if kind == SLOT_ROWS:
+            def pad_rows(a, full):
+                rows = full.shape[2]           # destination max_seq
+                if a.shape[0] != full.shape[0] or a.shape[2:] != full.shape[3:]:
+                    raise ValueError(
+                        f"{key}: payload lane {a.shape} does not fit "
+                        f"cache {full.shape}")
+                if a.shape[1] > rows:
+                    raise ValueError(
+                        f"{key}: payload carries {a.shape[1]} rows but the "
+                        f"destination cache holds only {rows}")
+                pad = [(0, 0)] * a.ndim
+                pad[1] = (0, rows - a.shape[1])
+                return jnp.pad(jnp.asarray(a), pad)
+            sub = jax.tree.map(pad_rows, sub, dst)
+        else:
+            def check_state(a, full):
+                if a.shape[0] != full.shape[0] or a.shape[1:] != full.shape[2:]:
+                    raise ValueError(
+                        f"{key}: payload lane {a.shape} does not fit "
+                        f"cache {full.shape}")
+                return jnp.asarray(a)
+            sub = jax.tree.map(check_state, sub, dst)
+        new_cache[key] = jax.tree.map(
+            lambda full, lane: ops.slot_scatter(full, lane, slot, axis=1,
+                                                mode=mode),
+            dst, sub)
+    return new_cache
+
+
+def slot_payload_bytes(payload) -> int:
+    """On-wire size of an ``export_slot`` payload — what a cross-node
+    migration must move over the interconnect."""
+    return int(sum(a.size * jnp.dtype(a.dtype).itemsize
+                   for a in jax.tree.leaves(payload)))

@@ -31,7 +31,9 @@ reads and the EWMA ``observe()`` over K tokens.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +44,7 @@ from repro.models import lm
 from repro.models.layers import Ctx
 from repro.serving.scheduler import (Request, SlotScheduler, chunk_plan)
 
-__all__ = ["Request", "ServeEngine", "serve_phase_tasks",
+__all__ = ["Request", "ServeEngine", "SlotSnapshot", "serve_phase_tasks",
            "make_prefill_step", "make_decode_step",
            "make_prefill_chunk_step", "make_decode_chunk_step"]
 
@@ -190,16 +192,56 @@ def make_decode_chunk_step(cfg: ModelConfig, run: RunConfig, ctx: Ctx,
     return decode_chunk
 
 
+def _install_step(cur, index, rem, done, tok, slot, offset, budget):
+    """Arm one slot's decode lane: ``tok`` is the pending (not yet
+    delivered, not yet cache-written) token, ``offset`` the slot's cache
+    write position, ``budget`` the tokens still owed.  Shared by fresh
+    admission (tok from the prefill logits, offset = prompt length) and
+    snapshot restore (tok/offset/budget from the drained cursor)."""
+    cur = cur.at[slot].set(tok)
+    index = index.at[slot].set(offset)
+    rem = rem.at[slot].set(budget)
+    done = done.at[slot].set(budget <= 0)
+    return cur, index, rem, done
+
+
 def _admit_step(cur, index, rem, done, logits, slot, plen, max_new):
     """Install a freshly prefilled request into its slot's decode lane:
     first generated token from the prefill logits, cache offset at the
     prompt length, token budget armed."""
     first = jnp.argmax(logits[0]).astype(jnp.int32)
-    cur = cur.at[slot].set(first)
-    index = index.at[slot].set(plen)
-    rem = rem.at[slot].set(max_new)
-    done = done.at[slot].set(max_new <= 0)
-    return cur, index, rem, done
+    return _install_step(cur, index, rem, done, first, slot, plen, max_new)
+
+
+@dataclasses.dataclass
+class SlotSnapshot:
+    """One request's portable in-flight state — everything another
+    engine needs to continue the stream bit-identically.
+
+    Decoding is greedy (RNG-free), so the cursor is just ``cur`` — the
+    PENDING token: computed, but not yet delivered to the request nor
+    written to the cache (delivery and the cache write both happen at
+    the next decode iteration) — plus ``kv_len`` (rows valid = prompt +
+    written tokens) and ``rem`` (tokens still owed).  ``payload`` is the
+    ``repro.models.lm.export_slot`` cache lane; ``None`` marks a COLD
+    snapshot (request never admitted — restoring simply re-queues it for
+    ordinary prefill admission)."""
+
+    request: Request
+    rem: int
+    kv_len: int = 0
+    cur: int | None = None
+    payload: dict | None = None
+
+    @property
+    def warm(self) -> bool:
+        return self.payload is not None
+
+    @property
+    def payload_bytes(self) -> int:
+        """On-wire cost of migrating this snapshot (cache lane only —
+        the host-side fields are negligible next to it)."""
+        return lm.slot_payload_bytes(self.payload) if self.warm else 0
 
 
 def _reset_mamba_slot(cache, slot):
@@ -231,6 +273,14 @@ class ServeEngine:
     loop one admission-round-plus-decode-chunk at a time, so an external
     scheduler (``repro.fleet``) can interleave and preempt serving work at
     chunk granularity.
+
+    Preemption is LOSSLESS: ``drain()`` stops the stream and returns every
+    request as a ``SlotSnapshot`` (in-flight slots warm — cache lane +
+    decode cursor — queued requests cold), and ``restore(snaps)`` admits
+    snapshots into this or ANY other engine built from the same model
+    config, including one with a different ``batch_size``/``max_seq``.
+    ``start``/``step`` are thin wrappers over the same admission machinery
+    — a step installs restored slots first, then prefills fresh ones.
     """
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, ctx: Ctx, params,
@@ -256,7 +306,11 @@ class ServeEngine:
         self._decode_fn = jax.jit(
             make_decode_chunk_step(cfg, run, ctx, decode_chunk, max_seq))
         self._admit_fn = jax.jit(_admit_step)
+        self._install_fn = jax.jit(_install_step)
         self._reset_fn = jax.jit(_reset_mamba_slot)
+        # warm snapshots awaiting a free slot (restored ahead of fresh
+        # admissions — they carry finished work)
+        self._restore_q: deque[SlotSnapshot] = deque()
         # transfer seam: tests swap this for a counting double to assert
         # the one-sync-per-chunk contract
         self._fetch = jax.device_get
@@ -291,9 +345,28 @@ class ServeEngine:
     # without losing in-flight state.  ``generate`` is the classic
     # run-to-drain form on top.
 
+    def _ensure_stream(self) -> None:
+        """Bring up the device-resident stream state if none is active
+        (fresh engine, or first restore after a drain)."""
+        if getattr(self, "_sched", None) is not None:
+            return
+        self._t0 = time.perf_counter()
+        self._sched = SlotScheduler(self.batch_size)
+        B = self.batch_size
+        self._cache = lm.init_cache(self.ctx, self.cfg, B, self.max_seq)
+        self._cur = jnp.zeros((B,), jnp.int32)
+        self._index = jnp.zeros((B,), jnp.int32)
+        self._rem = jnp.zeros((B,), jnp.int32)
+        self._done = jnp.ones((B,), bool)
+        # ``finished`` is a ledger: it survives drain/restore cycles and
+        # is only reset by ``start`` (a genuinely fresh stream)
+        if not hasattr(self, "finished"):
+            self.finished: list[Request] = []
+
     def start(self, requests: list[Request]) -> None:
-        """Install a request stream and reset the device-resident state.
-        Steps are then driven by ``step()`` until ``pending`` is False."""
+        """Install a FRESH request stream (any previous stream state is
+        reset).  Steps are then driven by ``step()`` until ``pending`` is
+        False.  To continue drained work instead, use ``restore``."""
         # validate up front: one oversize request must not abort the call
         # after other requests already burned device work
         for req in requests:
@@ -302,21 +375,89 @@ class ServeEngine:
                     f"request {req.uid}: prompt {len(req.prompt)} + "
                     f"max_new_tokens {req.max_new_tokens} exceeds "
                     f"max_seq {self.max_seq}")
-        self._t0 = time.perf_counter()
-        self._sched = SlotScheduler(self.batch_size)
+        self._sched = None
+        self._restore_q.clear()
+        self.finished = []
+        self._ensure_stream()
         self._sched.submit(requests)
-        B = self.batch_size
-        self._cache = lm.init_cache(self.ctx, self.cfg, B, self.max_seq)
-        self._cur = jnp.zeros((B,), jnp.int32)
-        self._index = jnp.zeros((B,), jnp.int32)
-        self._rem = jnp.zeros((B,), jnp.int32)
-        self._done = jnp.ones((B,), bool)
-        self.finished: list[Request] = []
+
+    def drain(self) -> list[SlotSnapshot]:
+        """Stop the stream LOSSLESSLY: every in-flight slot is exported
+        as a warm ``SlotSnapshot`` (cache lane + decode cursor, one host
+        sync for the cursor vectors), every queued / not-yet-installed
+        request as a cold one.  The engine is left idle (``pending`` is
+        False) and the snapshots can be ``restore``d here or on any
+        engine with the same model config — preemption becomes a drain,
+        not a discard."""
+        sched = getattr(self, "_sched", None)
+        if sched is None:
+            return []
+        snaps: list[SlotSnapshot] = []
+        active = sched.active()
+        if active:
+            # sync 1: the cursor vectors (kv_len gates the payload slice)
+            cur, index, rem = self._fetch(
+                (self._cur, self._index, self._rem))
+            # sync 2: every slot's payload in ONE stacked transfer
+            payloads = self._fetch([
+                lm.export_slot(self.cfg, self._cache, slot.sid,
+                               int(index[slot.sid]))
+                for slot in active])
+            self.sync_count += 2
+            for slot, payload in zip(list(active), payloads):
+                snaps.append(SlotSnapshot(
+                    request=slot.request, rem=int(rem[slot.sid]),
+                    kv_len=int(index[slot.sid]), cur=int(cur[slot.sid]),
+                    payload=payload))
+                sched.release(slot)
+        snaps.extend(self._restore_q)
+        self._restore_q.clear()
+        snaps.extend(SlotSnapshot(request=req,
+                                  rem=req.max_new_tokens)
+                     for req in sched.queue)
+        self._sched = None          # stream torn down; cache freed
+        self._cache = None
+        return snaps
+
+    def restore(self, snaps: list[SlotSnapshot]) -> None:
+        """Admit drained snapshots into this engine's stream (started on
+        demand).  Warm snapshots re-install their cache lane and resume
+        their cursor the moment a slot frees — ahead of fresh
+        admissions; cold ones join the ordinary FCFS queue.  Requests
+        continue BIT-IDENTICALLY to an uninterrupted run."""
+        for s in snaps:
+            need = s.kv_len + s.rem if s.warm \
+                else len(s.request.prompt) + s.request.max_new_tokens
+            if need > self.max_seq:
+                raise ValueError(
+                    f"request {s.request.uid}: snapshot needs {need} cache "
+                    f"rows but this engine holds max_seq {self.max_seq}")
+        self._ensure_stream()
+        for s in snaps:
+            if not s.warm:
+                self._sched.submit([s.request])
+            elif s.rem <= 0:        # finished between export and restore
+                self.finished.append(s.request)
+            else:
+                self._restore_q.append(s)
+
+    def _install_snapshot(self, snap: SlotSnapshot, sid: int) -> None:
+        """Write a warm snapshot's cache lane into slot ``sid`` and arm
+        its decode lane at the restored cursor."""
+        payload = jax.tree.map(jnp.asarray, snap.payload)
+        self._cache = lm.import_slot(self.cfg, self._cache, payload, sid,
+                                     mode=self.run.kernel_mode)
+        self._cur, self._index, self._rem, self._done = self._install_fn(
+            self._cur, self._index, self._rem, self._done,
+            jnp.asarray(snap.cur, jnp.int32), sid, snap.kv_len, snap.rem)
 
     @property
     def pending(self) -> bool:
-        """Whether the installed stream still has queued or in-flight
-        requests (False before ``start``)."""
+        """Whether the installed stream still has queued, restorable or
+        in-flight requests (False before ``start``/``restore`` and after
+        ``drain``)."""
+        if self._restore_q:
+            return True
         sched = getattr(self, "_sched", None)
         return sched.has_work if sched is not None else False
 
@@ -331,12 +472,20 @@ class ServeEngine:
         return sum(len(s.request.generated) for s in sched.active())
 
     def step(self) -> list[Request]:
-        """One engine step: admit whatever fits the free slots, run one
-        decode chunk, deliver the chunk's tokens.  Returns the requests
-        that finished THIS step (also appended to ``self.finished``)."""
+        """One engine step: admit whatever fits the free slots (restored
+        snapshots first, then fresh prefills), run one decode chunk,
+        deliver the chunk's tokens.  Returns the requests that finished
+        THIS step (also appended to ``self.finished``)."""
         if not self.pending:
             return []
         sched = self._sched
+        # restored slots first: their work is already paid for — a warm
+        # snapshot install is a cache write, not a prefill program
+        while self._restore_q:
+            slot = sched.occupy(self._restore_q[0].request)
+            if slot is None:
+                break
+            self._install_snapshot(self._restore_q.popleft(), slot.sid)
         # one phase entry per admitted request = one prefill program
         # run under the prefill cap (back-to-back entries coalesce the
         # cap write; the modeled measurement accounts each prefill)

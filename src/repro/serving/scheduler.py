@@ -101,6 +101,19 @@ class SlotScheduler:
             admitted.append(slot)
         return admitted
 
+    def occupy(self, request: Request) -> Slot | None:
+        """Place ``request`` directly into a free slot, bypassing the
+        FCFS queue — the restored-snapshot admission path, where the
+        request arrives mid-generation and its slot state is installed
+        by the engine instead of prefilled.  ``emitted`` resumes at the
+        tokens already delivered.  Returns None when no slot is free."""
+        for slot in self.slots:
+            if slot.free:
+                slot.request = request
+                slot.emitted = len(request.generated)
+                return slot
+        return None
+
     def release(self, slot: Slot) -> Request:
         """Finish a slot's request and free the slot for recycling."""
         req, slot.request, slot.emitted = slot.request, None, 0

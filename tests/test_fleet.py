@@ -132,6 +132,41 @@ def test_controller_conserves_budget(cfgs, budget, sens):
         assert alloc.node_w[n.name] <= n.ceil_w + 1e-9
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.dictionaries(_IDS,
+                       st.tuples(st.floats(min_value=60.0, max_value=330.0),
+                                 st.floats(min_value=1.0, max_value=50.0),
+                                 st.booleans()),
+                       min_size=1, max_size=8),
+       st.floats(min_value=150.0, max_value=1500.0),
+       st.floats(min_value=120.0, max_value=700.0),
+       st.booleans())
+def test_controller_conserves_with_cabinet_ceilings(cfgs, budget, cab_ceil,
+                                                    sens):
+    """Cabinet busbar/cooling ceilings are ENFORCED, not just accounted:
+    with the middle weighted_split level active, every cabinet roll-up
+    stays at or below its ceiling (floors excepted — physics wins), the
+    facility total still conserves, and node floors still hold."""
+    nodes = [_StubNode(name=f"cab{i % 2}/{k}", cabinet=f"cab{i % 2}",
+                       request=req, scale=sc)
+             for i, (k, (req, sc, _)) in enumerate(sorted(cfgs.items()))]
+    ceils = {"cab0": cab_ceil, "cab1": cab_ceil * 1.3}
+    ctl = FleetPowerController(policy="sensitivity" if sens else "even")
+    alloc = ctl.redistribute(budget, nodes, t=1.0, cabinet_ceils=ceils)
+    floors = {n.name: n.floor_w for n in nodes}
+    alloc.assert_conserved(floors)
+    if budget >= sum(floors.values()):
+        assert sum(alloc.node_w.values()) <= budget + 1e-6
+    cab_floors = {}
+    for n in nodes:
+        cab_floors[n.cabinet] = cab_floors.get(n.cabinet, 0.0) + n.floor_w
+    for cab, w in alloc.cabinet_w.items():
+        assert w <= max(ceils[cab], cab_floors[cab]) + 1e-6, (cab, w)
+    for n in nodes:
+        assert alloc.node_w[n.name] >= n.floor_w - 1e-9
+        assert alloc.node_w[n.name] <= n.ceil_w + 1e-9
+
+
 def test_even_policy_conserves_with_heterogeneous_floors():
     """The even split must water-fill, not clamp per-node: two nodes
     with floors 50/150 under a 210 W budget may not be granted 255 W."""
@@ -273,15 +308,11 @@ def test_serve_job_drives_real_engine():
     assert out["tokens"] == sum(len(r.generated) for r in done) == 18
 
 
-@pytest.mark.slow
-def test_serve_job_preempt_resume_no_duplicate_tokens():
-    """A real-engine ServeJob preempted mid-stint resumes cleanly: no
-    request keeps stale partial output (every stream is regenerated, not
-    duplicated) and ``emitted`` ends at exactly the delivered total."""
+def _real_engine_fixture(batch_size=2, max_seq=32, decode_chunk=4):
     from repro.models import lm
     from repro.models.layers import Ctx
     from repro.models.params import init_params
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.engine import ServeEngine
     from repro.sharding import RULE_SETS
     import jax
 
@@ -289,16 +320,60 @@ def test_serve_job_preempt_resume_no_duplicate_tokens():
     run = get_run_config("llama3.2-3b", remat="none", logits_chunk=16)
     ctx = Ctx(run, RULE_SETS[run.serve_rules_name], None)
     params = init_params(lm.model_decls(cfg), jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=32,
-                         decode_chunk=4)
+    engine = ServeEngine(cfg, run, ctx, params, batch_size=batch_size,
+                         max_seq=max_seq, decode_chunk=decode_chunk)
+    return cfg, engine
+
+
+@pytest.mark.slow
+def test_serve_job_preempt_migrates_in_flight_tokens():
+    """The default (migrate=True): preemption drains the engine into
+    portable snapshots — in-flight tokens survive, ``emitted`` never
+    double-counts, and every stream continues instead of regenerating."""
+    from repro.serving.engine import Request
+
+    cfg, engine = _real_engine_fixture()
     reqs = [Request(uid=i, prompt=[3 * i + 1, 5, 7], max_new_tokens=6)
             for i in range(3)]
     job = ServeJob("real", cfg, batch=2, prompt=8, new_tokens=6,
                    total_requests=3, decode_chunk=4,
                    engine=engine, requests=reqs)
     job.advance(0.1)                  # stint 1: starts, first chunk
-    assert engine.in_flight_tokens > 0
+    in_flight = engine.in_flight_tokens
+    assert in_flight > 0
+    partial = {r.uid: list(r.generated) for r in reqs}
+    job.preempt()                     # mid-stint: a drain, not a discard
+    assert job.snapshot_tokens == in_flight
+    assert job.snapshot_bytes > 0
+    assert job.last_preempt_dropped == 0
+    # the partial output survived the preemption untouched
+    assert {r.uid: list(r.generated)[:len(partial[r.uid])]
+            for r in reqs} == partial
+    while not job.done:
+        job.advance(0.1)              # stint 2: restore + run to drain
+    assert all(len(r.generated) == 6 for r in reqs)
+    assert job.emitted == 18          # every token generated exactly once
+
+
+@pytest.mark.slow
+def test_serve_job_drop_mode_regenerates_tokens():
+    """migrate=False is the PR-3 drop-and-restart baseline: preemption
+    destroys in-flight state, refunds it out of ``emitted``, and the
+    resumed stint regenerates it from scratch."""
+    from repro.serving.engine import Request
+
+    cfg, engine = _real_engine_fixture()
+    reqs = [Request(uid=i, prompt=[3 * i + 1, 5, 7], max_new_tokens=6)
+            for i in range(3)]
+    job = ServeJob("real", cfg, batch=2, prompt=8, new_tokens=6,
+                   total_requests=3, decode_chunk=4, migrate=False,
+                   engine=engine, requests=reqs)
+    job.advance(0.1)                  # stint 1: starts, first chunk
+    in_flight = engine.in_flight_tokens
+    assert in_flight > 0
     job.preempt()                     # mid-stint: in-flight work dropped
+    assert job.last_preempt_dropped == in_flight
+    assert job.snapshot_tokens == 0
     while not job.done:
         job.advance(0.1)              # stint 2: re-start + run to drain
     assert all(len(r.generated) == 6 for r in reqs)   # no duplication

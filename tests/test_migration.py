@@ -1,0 +1,433 @@
+"""Portable slot state: lossless serve preemption & cross-node migration.
+
+The acceptance contract of the migration refactor, at every layer:
+
+  * models — ``export_slot``/``import_slot`` round-trip a slot's cache
+    lane losslessly across caches of DIFFERENT batch size and max_seq
+    (hypothesis property over geometries);
+  * serving — a request preempted mid-decode and restored (same engine,
+    or an engine with different ``batch_size``/``max_seq``) emits
+    BIT-IDENTICAL tokens to an unpreempted run;
+  * fleet — a preempted ``ServeJob`` re-queues with its snapshots,
+    resumes on another node, the cluster charges the snapshot transfer
+    on the virtual clock, and telemetry splits preemption cost into
+    migrated (preserved) vs dropped (destroyed) tokens.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_model_config, get_run_config
+from repro.fleet import ServeJob, SimulatedCluster, TrainJob
+from repro.hw.tpu import DEFAULT_SUPERCHIP
+from repro.models import lm
+from repro.models.layers import Ctx
+from repro.models.params import init_params
+from repro.serving.engine import Request, ServeEngine, SlotSnapshot
+from repro.sharding import RULE_SETS
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+KEY = jax.random.PRNGKey(0)
+N_PMAX = DEFAULT_SUPERCHIP.p_max
+
+# one arch per cache schema: plain KV, local/global KV pairs, pure
+# recurrent state, and the hybrid mamba+shared-KV mix
+SCHEMA_ARCHS = ["llama3.2-3b", "gemma2-2b", "mamba2-370m", "zamba2-1.2b"]
+
+MIXED_PROMPTS = [[1, 2, 3], [4, 5, 6, 7, 8, 9, 10], [2, 4],
+                 [9, 8, 7, 6, 5], [3, 1, 4, 1, 5, 9, 2, 6, 5]]
+MIXED_NEW = [4, 6, 3, 5, 2]
+
+
+def _setup(arch, **cfg_over):
+    cfg = reduced(get_model_config(arch))
+    if cfg.n_experts:
+        cfg_over.setdefault("capacity_factor", 8.0)
+    cfg = dataclasses.replace(cfg, **cfg_over)
+    run = get_run_config(arch, remat="none", logits_chunk=16)
+    ctx = Ctx(run, RULE_SETS[run.rules_name], None)
+    params = init_params(lm.model_decls(cfg), KEY)
+    return cfg, run, ctx, params
+
+
+def _reqs():
+    return [Request(uid=i, prompt=list(p), max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(MIXED_PROMPTS, MIXED_NEW))]
+
+
+# ===========================================================================
+# models layer: export/import round trip
+# ===========================================================================
+
+def _filled_cache(ctx, cfg, batch, max_seq, seed):
+    """A cache whose every element is distinct — any mis-gathered row or
+    mis-scattered lane shows up as an exact-value mismatch."""
+    cache = lm.init_cache(ctx, cfg, batch, max_seq)
+    leaves, tree = jax.tree.flatten(cache)
+    out = []
+    for i, a in enumerate(leaves):
+        vals = jnp.arange(a.size, dtype=jnp.float32) * 0.25 + seed + 31 * i
+        out.append(vals.reshape(a.shape).astype(a.dtype))
+    return jax.tree.unflatten(tree, out)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(["llama3.2-3b", "mamba2-370m"]),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=3),
+       st.integers(min_value=0, max_value=16),
+       st.integers(min_value=0, max_value=100))
+def test_slot_roundtrip_survives_geometry_change(arch, b_src, b_dst,
+                                                 kv_len, seed):
+    """export -> import into a cache with different batch size and
+    max_seq -> export again is the identity on the payload, leaf for
+    leaf, bit for bit."""
+    cfg, run, ctx, _ = _setup(arch)
+    src_slot, dst_slot = b_src - 1, b_dst - 1
+    src = _filled_cache(ctx, cfg, b_src, 16, seed)
+    pay = lm.export_slot(cfg, src, src_slot, kv_len)
+    assert set(pay) == set(lm.cache_slot_spec(cfg))
+    dst = _filled_cache(ctx, cfg, b_dst, 16 + 2 * kv_len, seed + 1)
+    dst = lm.import_slot(cfg, dst, pay, dst_slot)
+    pay2 = lm.export_slot(cfg, dst, dst_slot, kv_len)
+    for (p1, l1), (p2, l2) in zip(
+            jax.tree_util.tree_leaves_with_path(pay),
+            jax.tree_util.tree_leaves_with_path(pay2)):
+        assert l1.shape == l2.shape, (p1, l1.shape, l2.shape)
+        assert bool(jnp.all(l1 == l2)), (arch, p1)
+    # other slots of the destination cache are untouched
+    for s in range(b_dst):
+        if s == dst_slot:
+            continue
+        ref = _filled_cache(ctx, cfg, b_dst, 16 + 2 * kv_len, seed + 1)
+        for a, b in zip(jax.tree.leaves(lm.export_slot(cfg, dst, s, kv_len)),
+                        jax.tree.leaves(lm.export_slot(cfg, ref, s, kv_len))):
+            assert bool(jnp.all(a == b))
+
+
+def test_import_rejects_oversize_payload():
+    cfg, run, ctx, _ = _setup("llama3.2-3b")
+    src = lm.init_cache(ctx, cfg, 2, 32)
+    pay = lm.export_slot(cfg, src, 0, 24)
+    small = lm.init_cache(ctx, cfg, 2, 16)
+    with pytest.raises(ValueError, match="rows"):
+        lm.import_slot(cfg, small, pay, 0)
+
+
+def test_export_rejects_bad_kv_len():
+    cfg, run, ctx, _ = _setup("llama3.2-3b")
+    cache = lm.init_cache(ctx, cfg, 2, 16)
+    with pytest.raises(ValueError):
+        lm.export_slot(cfg, cache, 0, 17)
+    with pytest.raises(ValueError):
+        lm.export_slot(cfg, cache, 0, -1)
+
+
+def test_slot_payload_bytes_counts_every_leaf():
+    cfg, run, ctx, _ = _setup("mamba2-370m")
+    cache = lm.init_cache(ctx, cfg, 2, 16)
+    pay = lm.export_slot(cfg, cache, 0, 0)   # recurrent state travels whole
+    expect = sum(a.size * jnp.dtype(a.dtype).itemsize
+                 for a in jax.tree.leaves(pay))
+    assert lm.slot_payload_bytes(pay) == expect > 0
+
+
+# ===========================================================================
+# serving layer: drain/restore parity
+# ===========================================================================
+
+@pytest.mark.parametrize("arch", SCHEMA_ARCHS)
+def test_drain_restore_parity_same_and_cross_geometry(arch):
+    """The acceptance criterion: a stream preempted mid-decode and
+    restored emits bit-identical tokens — on the same engine AND on an
+    engine with different batch_size/max_seq (cross-node migration)."""
+    cfg, run, ctx, params = _setup(arch)
+    ref = {r.uid: list(r.generated)
+           for r in ServeEngine(cfg, run, ctx, params, batch_size=3,
+                                max_seq=32,
+                                decode_chunk=4).generate(_reqs())}
+
+    # same engine: drain after one chunk, restore in place, run dry
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=3, max_seq=32,
+                      decode_chunk=4)
+    eng.start(_reqs())
+    eng.step()
+    snaps = eng.drain()
+    assert not eng.pending
+    assert any(s.warm for s in snaps)
+    eng.restore(snaps)
+    while eng.pending:
+        eng.step()
+    done = {r.uid: list(r.generated) for r in eng.finished}
+    done.update({s.request.uid: list(s.request.generated)
+                 for s in snaps if s.request.uid not in done})
+    assert {u: done[u] for u in ref} == ref
+
+    # cross geometry: fewer slots, longer cache on the receiving engine
+    eng1 = ServeEngine(cfg, run, ctx, params, batch_size=3, max_seq=32,
+                       decode_chunk=4)
+    eng1.start(_reqs())
+    eng1.step()
+    snaps = eng1.drain()
+    eng2 = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=48,
+                       decode_chunk=4)
+    eng2.restore(snaps)
+    while eng2.pending:
+        eng2.step()
+    got = {r.uid: list(r.generated)
+           for r in list(eng1.finished) + list(eng2.finished)}
+    assert got == ref
+
+
+def test_drain_midway_through_many_chunks_parity():
+    """Drain at EVERY chunk boundary of a longer stream (not just the
+    first) and restore — the cursor state is exact wherever it is cut."""
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+
+    def reqs():
+        return [Request(uid=0, prompt=[1, 2, 3], max_new_tokens=10),
+                Request(uid=1, prompt=[7, 5], max_new_tokens=9)]
+
+    ref = {r.uid: list(r.generated)
+           for r in ServeEngine(cfg, run, ctx, params, batch_size=2,
+                                max_seq=32, decode_chunk=3
+                                ).generate(reqs())}
+    for cut in range(1, 4):
+        eng = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=32,
+                          decode_chunk=3)
+        eng.start(reqs())
+        for _ in range(cut):
+            eng.step()
+        eng2 = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=32,
+                           decode_chunk=3)
+        eng2.restore(eng.drain())
+        while eng2.pending:
+            eng2.step()
+        got = {r.uid: list(r.generated)
+               for r in list(eng.finished) + list(eng2.finished)}
+        assert got == ref, f"cut after chunk {cut}"
+
+
+def test_drain_cold_requests_and_idle_engine():
+    """Queued (never admitted) requests drain as COLD snapshots and are
+    served normally on restore; draining an idle engine is empty."""
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+
+    def reqs():
+        return [Request(uid=i, prompt=[1 + i, 2, 3], max_new_tokens=8)
+                for i in range(5)]
+
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=1, max_seq=32,
+                      decode_chunk=4)
+    assert eng.drain() == []           # never started
+    eng.start(reqs())                  # 5 requests, 1 slot: 4 stay queued
+    eng.step()                         # uid 0 halfway through its stream
+    snaps = eng.drain()
+    assert sum(1 for s in snaps if s.warm) == 1
+    assert sum(1 for s in snaps if not s.warm) == 4
+    assert all(s.payload_bytes == 0 for s in snaps if not s.warm)
+    eng2 = ServeEngine(cfg, run, ctx, params, batch_size=3, max_seq=32,
+                       decode_chunk=4)
+    eng2.restore(snaps)
+    while eng2.pending:
+        eng2.step()
+    ref = {r.uid: list(r.generated)
+           for r in ServeEngine(cfg, run, ctx, params, batch_size=1,
+                                max_seq=32,
+                                decode_chunk=4).generate(reqs())}
+    got = {r.uid: list(r.generated)
+           for r in list(eng.finished) + list(eng2.finished)}
+    assert got == ref
+
+
+def test_restore_rejects_snapshot_exceeding_max_seq():
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=1, max_seq=64,
+                      decode_chunk=4)
+    eng.start([Request(uid=0, prompt=[1] * 20, max_new_tokens=20)])
+    eng.step()
+    snaps = eng.drain()
+    tiny = ServeEngine(cfg, run, ctx, params, batch_size=1, max_seq=16,
+                       decode_chunk=4)
+    with pytest.raises(ValueError, match="max_seq"):
+        tiny.restore(snaps)
+
+
+def test_restored_slots_admit_before_fresh_requests():
+    """Warm snapshots outrank queued fresh work: their tokens are paid
+    for.  With one slot, the drained request finishes before a fresh one
+    submitted alongside it starts."""
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=1, max_seq=32,
+                      decode_chunk=4)
+    eng.start([Request(uid=0, prompt=[1, 2, 3], max_new_tokens=8)])
+    eng.step()
+    snaps = eng.drain()
+    eng2 = ServeEngine(cfg, run, ctx, params, batch_size=1, max_seq=32,
+                       decode_chunk=4)
+    eng2.start([Request(uid=99, prompt=[4, 5], max_new_tokens=2)])
+    eng2.restore(snaps)
+    while eng2.pending:
+        eng2.step()
+    order = [r.uid for r in eng2.finished]
+    assert order == [0, 99]
+
+
+# ===========================================================================
+# fleet layer: migration economics on the simulated cluster
+# ===========================================================================
+
+def _migration_scenario(migrate: bool):
+    llama = get_model_config("llama3.2-3b")
+    jobs = [
+        TrainJob("train-0", llama, batch=8, seq=512, total_steps=10**9),
+        TrainJob("train-1", llama, batch=8, seq=512, total_steps=10**9),
+        ServeJob("serve-0", llama, batch=32, prompt=1024, new_tokens=256,
+                 total_requests=10**9, decode_chunk=32, value=4.0,
+                 migrate=migrate),
+        ServeJob("serve-1", llama, batch=32, prompt=1024, new_tokens=256,
+                 total_requests=10**9, decode_chunk=32, value=4.0,
+                 migrate=migrate),
+    ]
+    # deep dips below even one node's floor preempt EVERYTHING; on each
+    # recovery the resume order re-places serve jobs first, onto nodes
+    # other than their origin -> cross-node snapshot migrations
+    p = 4 * N_PMAX
+    trace = [(0.0, 0.8 * p), (5.0, 60.0), (7.0, 0.8 * p),
+             (12.0, 60.0), (14.0, 0.8 * p)]
+    return jobs, trace
+
+
+@pytest.mark.slow
+def test_cluster_migrates_serve_snapshots_and_charges_transfer():
+    jobs, trace = _migration_scenario(migrate=True)
+    c = SimulatedCluster(n_nodes=4, cabinet_size=2, policy="sensitivity")
+    out = c.run(jobs=jobs, budget=trace, until_s=20.0)
+    assert out["migrations"] >= 1
+    assert out["migrated_tokens"] > 0
+    assert out["migration_bytes"] > 0
+    assert out["migration_s"] > 0          # the transfer cost the clock
+    assert out["dropped_tokens"] > 0       # trains still roll back
+    # serve in-flight state survived: no serve tokens were dropped
+    serve_drop = sum(j.last_preempt_dropped for j in jobs
+                     if j.kind == "serve")
+    assert serve_drop == 0
+
+
+@pytest.mark.slow
+def test_migrate_beats_drop_on_useful_serve_tokens():
+    """Same fleet, same budget trace: lossless preemption serves at
+    least as many useful tokens as drop-and-restart, and destroys none
+    of the serving work the baseline destroys."""
+    outs, serves = {}, {}
+    for mode in (False, True):
+        jobs, trace = _migration_scenario(migrate=mode)
+        c = SimulatedCluster(n_nodes=4, cabinet_size=2,
+                             policy="sensitivity")
+        outs[mode] = c.run(jobs=jobs, budget=trace, until_s=20.0)
+        serves[mode] = sum(j.emitted for j in jobs if j.kind == "serve")
+    assert serves[True] >= serves[False]
+    drop_serve_waste = outs[False]["dropped_tokens"] \
+        - outs[True]["dropped_tokens"]
+    assert drop_serve_waste > 0            # the baseline destroyed work
+    assert serves[True] - serves[False] >= drop_serve_waste // 2
+
+
+def test_migration_determinism():
+    outs = []
+    for _ in range(2):
+        jobs, trace = _migration_scenario(migrate=True)
+        c = SimulatedCluster(n_nodes=4, cabinet_size=2,
+                             policy="sensitivity")
+        outs.append(c.run(jobs=jobs, budget=trace, until_s=10.0))
+    assert outs[0] == outs[1]
+
+
+def test_modeled_serve_job_drop_vs_migrate_accounting():
+    """Engineless ServeJob models the same economics: mid-wave preempt
+    either preserves the in-flight tokens in a snapshot (with an
+    analytic byte size) or refunds them out of ``emitted``."""
+    llama = get_model_config("llama3.2-3b")
+
+    def fresh(migrate):
+        j = ServeJob("s", llama, batch=4, prompt=64, new_tokens=32,
+                     total_requests=10**6, decode_chunk=8, migrate=migrate)
+        for _ in range(3):                 # 96 tokens: mid-wave (128/wave)
+            j.advance(0.1, now=0.3)
+        return j
+
+    mig = fresh(True)
+    assert mig.emitted == 96
+    mig.preempt()
+    assert mig.snapshot_tokens == 96 and mig.snapshot_bytes > 0
+    assert mig.emitted == 96               # preserved
+
+    drop = fresh(False)
+    drop.preempt()
+    assert drop.last_preempt_dropped == 96
+    assert drop.emitted == 0               # refunded, to be redone
+
+
+def test_value_ordering_preempts_low_value_first():
+    """Preemption sheds the lowest token-value job first even when kind
+    ordering says otherwise (a cheap serve job goes before a valuable
+    train job)."""
+    llama = get_model_config("llama3.2-3b")
+    jobs = [ServeJob("cheap-serve", llama, batch=32, prompt=1024,
+                     new_tokens=256, total_requests=10**9, decode_chunk=32,
+                     value=0.5),
+            TrainJob("paid-train", llama, batch=8, seq=512,
+                     total_steps=10**9, value=2.0)]
+    dip = [(0.0, 0.6 * 2 * N_PMAX), (5.0, 100.0), (8.0, 0.6 * 2 * N_PMAX)]
+    c = SimulatedCluster(n_nodes=2, cabinet_size=2, policy="sensitivity")
+    c.run(jobs=jobs, budget=dip, until_s=12.0)
+    assert ("preempted", None) in jobs[0].supervisor.history
+    assert jobs[1].supervisor.history == []   # the train job kept its node
+
+
+@pytest.mark.slow
+def test_value_weighting_steers_watts_to_high_value_node():
+    """Two identical serve jobs, different per-token value: the transfer
+    objective maximizes WEIGHTED tokens/s, so the high-value node ends
+    with at least the low-value node's grant (and strictly more when the
+    budget binds)."""
+    llama = get_model_config("llama3.2-3b")
+    jobs = [ServeJob("serve-lo", llama, batch=64, prompt=2048,
+                     new_tokens=512, total_requests=10**9, decode_chunk=32,
+                     value=1.0),
+            ServeJob("serve-hi", llama, batch=64, prompt=2048,
+                     new_tokens=512, total_requests=10**9, decode_chunk=32,
+                     value=8.0)]
+    c = SimulatedCluster(n_nodes=2, cabinet_size=2, policy="sensitivity")
+    c.run(jobs=jobs, budget=0.55 * 2 * N_PMAX, until_s=6.0)
+    alloc = c.allocations[-1]
+    by_job = {}
+    for node in c.nodes:
+        if node.job is not None:
+            by_job[node.job.name] = alloc.node_w[node.name]
+    assert by_job["serve-hi"] > by_job["serve-lo"]
+
+
+def test_cabinet_ceiling_enforced_in_allocations():
+    """With busbar ceilings, no cabinet's roll-up ever exceeds its limit
+    even when the facility budget would allow it."""
+    llama = get_model_config("llama3.2-3b")
+    ceil = {"cab0": 400.0, "cab1": 2 * N_PMAX}
+    jobs = [TrainJob(f"t{i}", llama, batch=8, seq=512, total_steps=10**9)
+            for i in range(4)]
+    c = SimulatedCluster(n_nodes=4, cabinet_size=2, policy="sensitivity",
+                         cabinet_ceil_w=ceil)
+    c.run(jobs=jobs, budget=4 * N_PMAX, until_s=5.0)
+    assert c.allocations, "no allocations recorded"
+    for alloc in c.allocations:
+        assert alloc.cabinet_w["cab0"] <= 400.0 + 1e-6
+        # the capped cabinet's slack was NOT stranded: cab1 got more
+        assert alloc.cabinet_w["cab1"] >= alloc.cabinet_w["cab0"] - 1e-6
