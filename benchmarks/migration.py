@@ -1,32 +1,51 @@
-"""Migration benchmark: lossless serve preemption vs drop-and-restart.
+"""Migration benchmark: preemption as drop, drain, proportional shed, int8.
 
-The fleet scenario the portable-slot-state refactor exists for: a
-facility budget that repeatedly dips below the fleet's floors (grid
-events / thermal excursions), preempting EVERY job — including the
-latency-sensitive serving jobs — then recovering.  The same mixed
-queue (two high-value serve jobs, two background training jobs) runs
-through ``repro.fleet.SimulatedCluster`` twice at the SAME budget
-trace:
+The fleet scenario the portable-slot-state stack exists for: a facility
+budget that repeatedly dips and squeezes (grid events / thermal
+excursions), preempting latency-sensitive serving work, then recovering
+— sometimes all at once, sometimes a few watts at a time.  The same
+mixed queue (two high-value serve jobs, two background training jobs)
+runs through ``repro.fleet.SimulatedCluster`` FOUR times at the SAME
+budget trace:
 
   drop      ServeJob(migrate=False) — the PR-3 baseline: a preempted
             serving stint destroys its in-flight batch; the tokens are
             refunded and regenerated after resume (double-paid work)
-  migrate   ServeJob(migrate=True) — preemption drains every slot into
-            a portable SlotSnapshot; the job re-queues WITH its
-            snapshots and resumes on whichever node frees first, the
-            cluster charging the snapshot transfer
-            (bytes / interconnect BW) on the receiving node's clock
+  migrate   ServeJob(migrate=True) — the PR-4 baseline: preemption
+            drains every slot into a portable SlotSnapshot; the job
+            re-queues WITH its snapshots and resumes origin-affine
+            (its own node when free, else the cheapest link), the
+            cluster charging the transfer at the LINK bandwidth on the
+            receiving node's clock
+  partial   ServeJob(partial=True) — proportional preemption: a budget
+            squeeze sheds only the slots it strands
+            (ceil(deficit / margin-per-slot), fewest remaining tokens
+            first), survivors keep serving, and parked slots re-admit
+            a few watts at a time as the budget staircases back —
+            instead of waiting for a whole node's worth of headroom
+  int8      ServeJob(snapshot_int8=True) — the migrate arm with
+            snapshot payloads int8-compressed at rest: migration bytes
+            (and wire seconds) roughly halve at a bounded parity cost
 
 and reports per mode: USEFUL serve tokens (delivered once, never
 redone), fleet tokens/s, modeled J per useful serve token, request
-latency p50/p99 (virtual clock, wave completion), dropped vs migrated
-tokens, and the migration count/bytes/seconds.  Everything runs on the
-virtual clock — bit-deterministic, machine-independent.
+latency p50/p99 (virtual clock, per-stream completion), dropped vs
+migrated vs parked tokens, and the migration count/bytes/seconds.
+Everything runs on the virtual clock — bit-deterministic,
+machine-independent.
+
+The budget trace has two regimes: two DEEP DIPS below any node's floor
+(everything preempts; on recovery the quick-restart training jobs grab
+the first free nodes, so the snapshot-carrying serve jobs must migrate
+— origin-affine, cheapest-link), then two SQUEEZES that strand only
+half of one serve batch's useful margin, recovering in watt-sized
+steps (the regime where proportional preemption pays).
 
 Machine-readable results go to ``BENCH_migrate.json``.  Smoke gates
 (CI): migration must recover at least ``--min-recovery`` (default 0.5)
-of the tokens the baseline drops, and must not serve FEWER useful
-tokens than the baseline.
+of the tokens the baseline drops and serve no fewer useful tokens;
+int8 must halve migration bytes within +-10%; partial drains must
+serve at least the migrate arm's useful tokens at LOWER p99.
 
   PYTHONPATH=src:. python benchmarks/migration.py \
       [--nodes 4] [--duration 40] [--min-recovery 0.5]
@@ -40,14 +59,24 @@ import json
 from benchmarks.common import emit
 from repro.configs.registry import get_model_config
 from repro.fleet import ServeJob, SimulatedCluster, TrainJob
+from repro.fleet.cluster import USEFUL_MARGIN_W
 from repro.hw.tpu import DEFAULT_SUPERCHIP
 
 #: Token value of a serve token relative to a background train token in
 #: the fleet objective (and the preemption order).
 SERVE_VALUE = 4.0
 
+#: Restart backoffs: a train job restarts from its checkpoint almost
+#: immediately; a serve stint pays for drain + state streaming setup.
+#: The asymmetry is what lets training reclaim free nodes first after a
+#: deep dip — forcing the snapshot-carrying serve jobs through the
+#: origin-affine / cheapest-link migration path this benchmark measures.
+TRAIN_BACKOFF_S = 0.05
+SERVE_BACKOFF_S = 2.5
 
-def _jobs(n_nodes: int, migrate: bool) -> list:
+
+def _jobs(n_nodes: int, migrate: bool, partial: bool = False,
+          snapshot_int8: bool = False) -> list:
     """Half serving (high value), half training (background)."""
     llama = get_model_config("llama3.2-3b")
     mamba = get_model_config("mamba2-370m")
@@ -57,26 +86,45 @@ def _jobs(n_nodes: int, migrate: bool) -> list:
             jobs.append(ServeJob(
                 f"serve-{i}", llama, batch=32, prompt=1024, new_tokens=256,
                 total_requests=10**9, decode_chunk=32, value=SERVE_VALUE,
-                migrate=migrate, max_restarts=64))
+                migrate=migrate, partial=partial,
+                snapshot_int8=snapshot_int8, max_restarts=64,
+                backoff_s=SERVE_BACKOFF_S))
         else:
             jobs.append(TrainJob(
                 f"train-{i}", mamba if i % 4 == 3 else llama, batch=8,
-                seq=512, total_steps=10**9, max_restarts=64))
+                seq=512, total_steps=10**9, max_restarts=64,
+                backoff_s=TRAIN_BACKOFF_S))
     return jobs
 
 
 def _budget_trace(n_nodes: int, duration: float) -> list:
-    """Repeated deep dips below even one node's floor (everything
-    preempts, serving included), with recovery legs in between — each
-    cycle forces the serve jobs through a preempt/resume round and, on
-    resume, onto different nodes (a migration)."""
+    """Two regimes against the same fleet:
+
+      * deep dips below any node's floor — everything preempts; the
+        recoveries force cross-node snapshot migrations (trains restart
+        first and take the lowest-numbered nodes);
+      * squeezes to ``2*min_node_w - margin/2`` — with the trains shed,
+        the two serve nodes are short exactly half of one batch's
+        useful margin, so a partial-capable job sheds
+        ``ceil(deficit / (margin / batch))`` slots and keeps serving;
+        recovery arrives in margin/4-sized steps that re-admit parked
+        slots long before a whole node's worth of headroom exists.
+    """
     p = n_nodes * DEFAULT_SUPERCHIP.p_max
-    legs, cycle = [], 0.25
-    for k in range(int(1 / cycle)):
-        legs.append((k * cycle, 0.75))
-        legs.append((k * cycle + 0.15, 0.02))   # below any node's floor
-        legs.append((k * cycle + 0.20, 0.75))
-    return [(f * duration, frac * p) for f, frac in legs]
+    hi = 0.75 * p
+    dip = 0.5 * DEFAULT_SUPERCHIP.p_floor
+    min_w = DEFAULT_SUPERCHIP.p_floor + USEFUL_MARGIN_W
+    sq0 = 2 * min_w - USEFUL_MARGIN_W / 2    # strands half a batch
+    sq1 = 2 * min_w - USEFUL_MARGIN_W / 4    # half the parked return
+    sq2 = 2 * min_w                          # full batch floats again
+    legs = [
+        (0.00, hi),
+        (0.10, dip), (0.15, hi),             # dip 1 -> migrations
+        (0.30, dip), (0.35, hi),             # dip 2
+        (0.50, sq0), (0.60, sq1), (0.65, sq2), (0.70, hi),   # squeeze 1
+        (0.82, sq0), (0.90, sq1), (0.95, sq2),               # squeeze 2
+    ]
+    return [(f * duration, w) for f, w in legs]
 
 
 def _latency_pcts(jobs) -> tuple[float, float]:
@@ -89,13 +137,21 @@ def _latency_pcts(jobs) -> tuple[float, float]:
     return p50, p99
 
 
+ARMS = (
+    ("drop", dict(migrate=False)),
+    ("migrate", dict(migrate=True)),
+    ("partial", dict(migrate=True, partial=True)),
+    ("int8", dict(migrate=True, snapshot_int8=True)),
+)
+
+
 def run(n_nodes: int = 4, duration: float = 40.0,
         min_recovery: float | None = None,
         json_path: str = "BENCH_migrate.json") -> dict:
     trace = _budget_trace(n_nodes, duration)
     results: dict = {}
-    for mode, label in ((False, "drop"), (True, "migrate")):
-        jobs = _jobs(n_nodes, migrate=mode)
+    for label, kw in ARMS:
+        jobs = _jobs(n_nodes, **kw)
         cluster = SimulatedCluster(n_nodes=n_nodes,
                                    cabinet_size=max(n_nodes // 2, 1),
                                    policy="sensitivity")
@@ -110,7 +166,7 @@ def run(n_nodes: int = 4, duration: float = 40.0,
                  / useful if useful else 0.0),
             "latency_p50_s": p50,
             "latency_p99_s": p99,
-            # train rollback drops are identical in both runs — the
+            # train rollback drops are identical in every run — the
             # recovery metric is about SERVING work only
             "serve_dropped_tokens": sum(j.dropped_total for j in jobs
                                         if j.kind == "serve"),
@@ -118,6 +174,7 @@ def run(n_nodes: int = 4, duration: float = 40.0,
         }
 
     drop, mig = results["drop"], results["migrate"]
+    part, int8 = results["partial"], results["int8"]
     dropped_base = drop["serve_dropped_tokens"]
     dropped_mig = mig["serve_dropped_tokens"]
     recovery = ((dropped_base - dropped_mig) / dropped_base
@@ -126,29 +183,43 @@ def run(n_nodes: int = 4, duration: float = 40.0,
     results["serve_token_gain"] = (
         mig["useful_serve_tokens"] / drop["useful_serve_tokens"]
         if drop["useful_serve_tokens"] else float("inf"))
+    results["partial_token_gain"] = (
+        part["useful_serve_tokens"] / mig["useful_serve_tokens"]
+        if mig["useful_serve_tokens"] else float("inf"))
+    results["int8_bytes_ratio"] = (
+        int8["fleet"]["migration_bytes"] / mig["fleet"]["migration_bytes"]
+        if mig["fleet"]["migration_bytes"] else float("inf"))
     results["scenario"] = {
         "nodes": n_nodes, "duration_s": duration,
         "serve_value": SERVE_VALUE,
+        "serve_backoff_s": SERVE_BACKOFF_S,
+        "train_backoff_s": TRAIN_BACKOFF_S,
         "budget_trace_w": [[t, w] for t, w in trace],
     }
     with open(json_path, "w") as f:
         json.dump(results, f, indent=1)
 
-    for label in ("drop", "migrate"):
+    for label, _ in ARMS:
         r = results[label]
         emit(f"migrate_{label}", r["fleet"]["busy_s"] * 1e6,
              f"{r['useful_serve_tokens']}tok"
              f"|{r['j_per_useful_serve_token']*1e3:.2f}mJ/tok"
              f"|p99={r['latency_p99_s']:.2f}s"
              f"|{r['serve_dropped_tokens']}dropped"
-             f"|{r['fleet']['migrations']}migrations")
+             f"|{r['fleet']['migrations']}migrations"
+             f"|{r['fleet']['shed_slots']}shed")
     emit("migrate_recovery", 0.0, f"{recovery:.3f}")
     emit("migrate_serve_token_gain", 0.0,
          f"{results['serve_token_gain']:.3f}x")
+    emit("migrate_partial_token_gain", 0.0,
+         f"{results['partial_token_gain']:.3f}x")
+    emit("migrate_int8_bytes_ratio", 0.0,
+         f"{results['int8_bytes_ratio']:.3f}")
 
-    # acceptance gates: the scenario must actually exercise both paths,
-    # and lossless preemption must beat drop-and-restart on served
-    # tokens under the same fleet budget
+    # acceptance gates: the scenario must actually exercise every path,
+    # lossless preemption must beat drop-and-restart on served tokens,
+    # int8 must halve the wire bytes, and proportional sheds must serve
+    # no fewer tokens than all-or-nothing drains at lower tail latency
     assert drop["fleet"]["preemptions"] >= 2, \
         "budget dips failed to exercise preemption"
     assert mig["fleet"]["migrations"] >= 1, \
@@ -156,6 +227,17 @@ def run(n_nodes: int = 4, duration: float = 40.0,
     assert mig["useful_serve_tokens"] >= drop["useful_serve_tokens"], (
         f"migration served fewer useful tokens "
         f"({mig['useful_serve_tokens']} < {drop['useful_serve_tokens']})")
+    assert part["fleet"]["partial_drains"] >= 1, \
+        "squeeze legs failed to exercise proportional preemption"
+    assert part["useful_serve_tokens"] >= mig["useful_serve_tokens"], (
+        f"partial drains served fewer useful tokens "
+        f"({part['useful_serve_tokens']} < {mig['useful_serve_tokens']})")
+    assert part["latency_p99_s"] < mig["latency_p99_s"], (
+        f"partial drains did not improve p99 "
+        f"({part['latency_p99_s']} >= {mig['latency_p99_s']})")
+    assert 0.45 <= results["int8_bytes_ratio"] <= 0.55, (
+        f"int8 payloads moved {results['int8_bytes_ratio']:.3f}x the raw "
+        f"migration bytes (want ~0.5 +-10%)")
     if min_recovery is not None and recovery < min_recovery:
         raise SystemExit(
             f"migration regression: only {recovery:.3f} of the baseline's "

@@ -133,6 +133,21 @@ class FleetNode:
         self.grant_w = 0.0
         return job
 
+    def refit(self) -> None:
+        """Rebuild the power session after the job's phase tasks changed
+        (a proportional preemption shed or regrew slots): the backend
+        re-sweeps the new task profile and the schedule re-decides its
+        per-phase caps under the standing grant.  The EWMA-refined table
+        restarts — the modeled cost of changing the machine under a live
+        session."""
+        if self.job is None:
+            return
+        tasks = self.job.phase_tasks()
+        self._tasks = {task.name: task for task in tasks}
+        self.pm = PowerManager(tasks=tasks, metric=self.metric,
+                               backend=self.backend, spec=self.spec)
+        self.pm.set_grant(self.grant_w)
+
     def set_grant(self, watts: float) -> None:
         self.grant_w = watts
         if self.pm is not None:
@@ -257,22 +272,29 @@ class SimulatedCluster:
                  metric: str = "sed", policy: str = "sensitivity",
                  quantum_s: float = 1.0,
                  useful_margin_w: float = USEFUL_MARGIN_W,
-                 cabinet_ceil_w=None, interconnect_bw: float | None = None):
+                 cabinet_ceil_w=None, interconnect_bw: float | None = None,
+                 cross_cabinet_bw: float | None = None):
         if n_nodes < 1:
             raise ValueError("need at least one node")
         self.spec = spec
         self.quantum_s = quantum_s
         self.useful_margin_w = useful_margin_w
         self.cabinet_ceil_w = cabinet_ceil_w
-        # snapshot-migration bandwidth: the chip's ICI link rate unless
-        # the deployment says otherwise
+        # snapshot-migration bandwidth: the chip's ICI link rate for
+        # same-cabinet links unless the deployment says otherwise;
+        # cross-cabinet hops leave the ICI domain (DCN-class) and default
+        # to a quarter of it — the per-link cost model placement
+        # affinity minimizes over
         self.interconnect_bw = (interconnect_bw if interconnect_bw
                                 else spec.chip.ici_bandwidth)
+        self.cross_cabinet_bw = (cross_cabinet_bw if cross_cabinet_bw
+                                 else self.interconnect_bw / 4.0)
         self.nodes = [
             FleetNode(name=f"cab{i // cabinet_size}/n{i:02d}",
                       cabinet=f"cab{i // cabinet_size}", spec=spec,
                       metric=metric)
             for i in range(n_nodes)]
+        self._cabinet_of = {n.name: n.cabinet for n in self.nodes}
         self.clock = VirtualClock()
         self.controller = FleetPowerController(policy=policy)
         self.telemetry = FleetTelemetry()
@@ -287,9 +309,27 @@ class SimulatedCluster:
         return [n for n in self.nodes if n.busy]
 
     # -- migration cost model ------------------------------------------------
+    def link_bw(self, src: str, dst: str) -> float:
+        """Bandwidth of the interconnect link between two nodes: ICI rate
+        within a cabinet, the (slower) cross-cabinet rate between
+        cabinets, unbounded to oneself."""
+        if src == dst:
+            return float("inf")
+        same_cab = self._cabinet_of.get(src) == self._cabinet_of.get(dst)
+        return self.interconnect_bw if same_cab else self.cross_cabinet_bw
+
+    def transfer_seconds(self, src: str, dst: str, nbytes: float) -> float:
+        """Virtual seconds a snapshot transfer from ``src`` to ``dst``
+        occupies the receiving node — the per-link cost placement
+        affinity minimizes (0 on the origin node itself)."""
+        if nbytes <= 0 or src == dst:
+            return 0.0
+        return float(nbytes) / self.link_bw(src, dst)
+
     def migration_seconds(self, nbytes: float) -> float:
-        """Virtual seconds a cross-node snapshot transfer occupies the
-        receiving node: payload bytes over the interconnect bandwidth."""
+        """Legacy link-agnostic transfer price: payload bytes over the
+        intra-cabinet ICI rate.  Link-aware callers (the scheduler's
+        placement affinity) use ``transfer_seconds`` instead."""
         return float(nbytes) / self.interconnect_bw if nbytes > 0 else 0.0
 
     def cabinet_ceils(self, nodes) -> dict[str, float] | None:
@@ -308,7 +348,8 @@ class SimulatedCluster:
         trace = BudgetTrace.of(budget)
         sched = FleetScheduler(
             list(jobs),
-            min_node_w=self.nodes[0].floor_w + self.useful_margin_w)
+            min_node_w=self.nodes[0].floor_w + self.useful_margin_w,
+            margin_w=self.useful_margin_w)
         self.scheduler = sched
         while self.clock.now < until_s:
             now = self.clock.now
@@ -330,6 +371,10 @@ class SimulatedCluster:
                 self.telemetry.record_kept(events["kept_tokens"])
             for m in events["migrations"]:
                 self.telemetry.record_migration(m["bytes"], m["seconds"])
+            for p in events.get("partials", ()):
+                self.telemetry.record_partial(p["slots"], p["tokens"])
+            for u in events.get("unparked", ()):
+                self.telemetry.record_unpark(u["slots"])
 
             busy = self.busy_nodes()
             if not busy and not sched.has_work:

@@ -29,6 +29,7 @@ recovers.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Protocol, runtime_checkable
 
@@ -101,12 +102,14 @@ class TrainJob:
     chips: int = 1
     step_fn: object = None         # Optional[Callable[[int], None]]
     max_restarts: int = 8
+    backoff_s: float = 0.1
     value: float = 1.0
     kind: str = dataclasses.field(default="train", init=False)
     steps_done: int = dataclasses.field(default=0, init=False)
 
     def __post_init__(self):
-        self.supervisor = StepwiseSupervisor(max_restarts=self.max_restarts)
+        self.supervisor = StepwiseSupervisor(max_restarts=self.max_restarts,
+                                             backoff_s=self.backoff_s)
         self._tasks: list[Task] | None = None
         self.last_preempt_dropped = 0   # tokens rolled back at last preempt
         self.dropped_total = 0          # cumulative rolled-back tokens
@@ -147,10 +150,21 @@ class TrainJob:
 
 
 @dataclasses.dataclass
+class _SimSlot:
+    """One modeled in-flight stream (engineless ``ServeJob``): tokens
+    generated toward its current request and when that request started
+    on the virtual clock (None = not yet / between requests)."""
+
+    progress: int = 0
+    started: float | None = None
+
+
+@dataclasses.dataclass
 class ServeJob:
     """A serving stint: phases from ``serve_phase_tasks`` at decode-chunk
-    granularity (one step = ``batch`` slots x ``decode_chunk`` tokens,
-    with the prefill phase amortized over each request's lifetime).
+    granularity (one step = ``active_cap`` slots x ``decode_chunk``
+    tokens, with the prefill phase amortized over each request's
+    lifetime).
 
     ``engine`` optionally carries a real ``ServeEngine``; the job then
     drives it through ``start()``/``step()`` so each fleet step performs
@@ -172,12 +186,21 @@ class ServeJob:
     twice there — exactly as a rolled-back TrainJob re-executes its
     un-checkpointed steps.
 
-    Without an engine the same economics are modeled: requests advance
-    in waves of ``batch`` concurrent streams; the tokens into the
-    current wave are the in-flight state a drop destroys and a
-    migration preserves (snapshot size from the analytic KV-cache bytes
-    model).  Wave completion times against the virtual clock feed
-    ``request_latencies`` — the p50/p99 the migration benchmark reports."""
+    ``partial=True`` additionally makes preemption PROPORTIONAL: when
+    the envelope shortfall strands only part of the batch, the scheduler
+    calls ``preempt(max_slots=k)`` and the job sheds just enough slots
+    (fewest remaining tokens first) into a locally PARKED snapshot set
+    while the survivors keep serving; ``grow`` re-admits parked slots as
+    the budget recovers.  ``snapshot_int8=True`` compresses snapshot
+    payloads at rest (per-row int8 + f32 scale), roughly halving the
+    migration bytes at a bounded parity cost.
+
+    Without an engine the same economics are modeled per slot: each of
+    ``active_cap`` concurrent streams advances ``decode_chunk`` tokens
+    per step, completing (and restarting) independently against the
+    virtual clock — completions feed ``request_latencies``, the p50/p99
+    the migration benchmark reports; per-slot snapshot bytes come from
+    the analytic KV-cache model at each stream's current depth."""
 
     name: str
     cfg: object                    # repro.configs.base.ModelConfig
@@ -190,23 +213,36 @@ class ServeJob:
     engine: object = None          # Optional[repro.serving.engine.ServeEngine]
     requests: list = None          # real-engine mode: the stream to serve
     max_restarts: int = 8
+    backoff_s: float = 0.1
     value: float = 1.0
     migrate: bool = True
+    partial: bool = False
+    snapshot_int8: bool = False
     kind: str = dataclasses.field(default="serve", init=False)
     emitted: int = dataclasses.field(default=0, init=False)
 
     def __post_init__(self):
-        self.supervisor = StepwiseSupervisor(max_restarts=self.max_restarts)
+        self.supervisor = StepwiseSupervisor(max_restarts=self.max_restarts,
+                                             backoff_s=self.backoff_s)
         self._tasks: list[Task] | None = None
+        self._tasks_key: int | None = None
         self._started = False
         self._snapshots: list | None = None   # drained SlotSnapshots
         self._delivered_seen = 0
-        self._wave_start: float | None = None
         self.request_latencies: list[float] = []
         self.last_preempt_dropped = 0
         self.dropped_total = 0
         self.snapshot_tokens = 0
         self.snapshot_bytes = 0
+        # -- proportional-preemption state ---------------------------------
+        self._active_cap = self.batch       # slots allowed to decode
+        self._slots = [_SimSlot() for _ in range(self.batch)]  # modeled
+        self._parked: list = []   # shed slots: _SimSlots / SlotSnapshots
+        self.last_shed_slots = 0
+        self.last_shed_tokens = 0
+        self.last_shed_bytes = 0
+        if self.engine is not None and self.snapshot_int8:
+            self.engine.snapshot_int8 = True
 
     @property
     def total_tokens(self) -> int:
@@ -215,15 +251,39 @@ class ServeJob:
     @property
     def done(self) -> bool:
         if self.engine is not None:
-            return self._started and not self.engine.pending
+            return (self._started and not self.engine.pending
+                    and not self._parked)
         return self.emitted >= self.total_tokens
 
+    # -- proportional-preemption surface ------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Full slot count — what ``active_cap`` regrows back to."""
+        return self.batch
+
+    @property
+    def active_cap(self) -> int:
+        """Slots currently allowed to decode (<= capacity; lowered by
+        ``preempt(max_slots=...)``, raised by ``grow``)."""
+        return self._active_cap
+
+    @property
+    def parked_slots(self) -> int:
+        return len(self._parked)
+
+    @property
+    def partial_capable(self) -> bool:
+        """Whether the scheduler may shed this job slot-by-slot instead
+        of suspending it whole (requires the lossless drain path)."""
+        return self.partial and self.migrate
+
     def phase_tasks(self) -> list[Task]:
-        if self._tasks is None:
+        if self._tasks is None or self._tasks_key != self._active_cap:
             from repro.serving.engine import serve_phase_tasks
             self._tasks = serve_phase_tasks(
-                self.cfg, batch=self.batch, prompt=self.prompt,
+                self.cfg, batch=self._active_cap, prompt=self.prompt,
                 new_tokens=self.decode_chunk, chips=self.chips)
+            self._tasks_key = self._active_cap
         return self._tasks
 
     def step_phases(self) -> list[tuple[str, float]]:
@@ -233,40 +293,36 @@ class ServeJob:
         return [("prefill", prefill_weight), ("decode", 1.0)]
 
     def tokens_per_step(self) -> int:
-        return self.batch * self.decode_chunk
+        return self._active_cap * self.decode_chunk
 
-    # -- modeled wave accounting (engine=None mode) -------------------------
-    @property
-    def _wave_tokens(self) -> int:
-        return self.batch * self.new_tokens
-
-    def _requests_completed(self, emitted: int) -> int:
-        """Requests fully served at ``emitted`` tokens: waves of ``batch``
-        concurrent streams complete together (the final wave may be
-        short)."""
-        if emitted >= self.total_tokens:
-            return self.total_requests
-        return (emitted // self._wave_tokens) * self.batch
-
+    # -- modeled per-slot accounting (engine=None mode) ---------------------
     def _in_flight_modeled(self) -> int:
         """Tokens generated for requests not yet complete — the state a
-        drop destroys and a migration preserves."""
-        return self.emitted \
-            - self._requests_completed(self.emitted) * self.new_tokens
+        drop destroys and a migration (or a parked slot) preserves."""
+        return sum(s.progress for s in self._slots) \
+            + sum(s.progress for s in self._parked)
 
-    def _modeled_snapshot_bytes(self, in_flight: int) -> int:
-        """Analytic on-wire size of the in-flight wave's cache state
-        (the engineless analogue of summing SlotSnapshot payloads)."""
-        if in_flight <= 0:
+    def _slot_bytes(self, progress: int) -> int:
+        """Analytic on-wire size of ONE stream's cache lane at its
+        current depth (the engineless analogue of
+        ``SlotSnapshot.payload_bytes``), int8-scaled when the job
+        compresses snapshots."""
+        if progress <= 0:
             return 0
         from repro.hw import flops as F
-        depth = self.prompt + in_flight // max(self.batch, 1)
-        return int(F._cache_bytes(self.cfg, self.batch, depth))
+        raw = F._cache_bytes(self.cfg, 1, self.prompt + progress)
+        if self.snapshot_int8:
+            from repro.models.lm import int8_payload_ratio
+            raw *= int8_payload_ratio(self.cfg)
+        return int(raw)
 
     # -- execution ----------------------------------------------------------
     def advance(self, step_s: float, now: float | None = None) -> int:
         if self.engine is not None:
             if not self._started:
+                limit = getattr(self.engine, "set_slot_limit", None)
+                if limit is not None:
+                    limit(min(self._active_cap, self.engine.batch_size))
                 if self._snapshots is not None:
                     # lossless resume: drained snapshots re-admit, on
                     # whatever engine this job now fronts
@@ -292,30 +348,56 @@ class ServeJob:
             self._delivered_seen = delivered
             self.emitted += fresh
             return fresh
-        if now is not None and self._wave_start is None \
-                and self.emitted < self.total_tokens:
-            self._wave_start = now - step_s
-        done_before = self._requests_completed(self.emitted)
-        fresh = min(self.tokens_per_step(), self.total_tokens - self.emitted)
+        # modeled: every active stream gains up to decode_chunk tokens,
+        # completing (and restarting) independently; parked slots hold
+        fresh = 0
+        for s in self._slots:
+            if self.emitted + fresh >= self.total_tokens:
+                break
+            if s.started is None and now is not None:
+                s.started = now - step_s
+            take = min(self.decode_chunk, self.new_tokens - s.progress,
+                       self.total_tokens - self.emitted - fresh)
+            s.progress += take
+            fresh += take
+            if s.progress >= self.new_tokens:
+                if now is not None and s.started is not None:
+                    self.request_latencies.append(now - s.started)
+                s.progress = 0
+                s.started = None
         self.emitted += fresh
-        newly = self._requests_completed(self.emitted) - done_before
-        if newly and now is not None:
-            start = self._wave_start if self._wave_start is not None \
-                else now - step_s
-            self.request_latencies.extend([now - start] * newly)
-            self._wave_start = now if self.emitted < self.total_tokens \
-                else None
         return fresh
 
-    def preempt(self) -> float:
+    # -- preemption: whole, or proportional ---------------------------------
+    def preempt(self, max_slots: int | None = None) -> float:
+        """Cooperative preemption.  With ``max_slots=None`` the whole job
+        suspends (parked slots rejoin the snapshot set and the job
+        resumes at full capacity).  With ``max_slots=k`` — the minimal
+        slot set the scheduler computed for the shrunk grant — only the
+        surplus slots are shed into the locally parked set, the
+        survivors keep serving, and NO backoff is due (the job never
+        left its node); the shed cost is reported through
+        ``last_shed_slots/tokens/bytes``."""
+        if max_slots is not None:
+            return self._shed_to(max_slots)
         self.last_preempt_dropped = 0
         self.snapshot_tokens = self.snapshot_bytes = 0
         if self.engine is not None:
             if self._started:
                 if self.migrate:
-                    in_flight = self.engine.in_flight_tokens
-                    self._snapshots = self.engine.drain()
-                    self.snapshot_tokens = in_flight
+                    # parked lanes rejoin the drain: one snapshot set
+                    # travels, and the job resumes at full capacity (the
+                    # scheduler re-sheds under the new grant if needed).
+                    # Preserved tokens are counted off the warm snapshots
+                    # themselves so not-yet-re-admitted restores (the
+                    # engine's restore queue) are included too.
+                    self._snapshots = list(self._parked) \
+                        + self.engine.drain()
+                    self._parked = []
+                    self._active_cap = self.batch
+                    self.snapshot_tokens = sum(
+                        len(s.request.generated) for s in self._snapshots
+                        if s.warm)
                     self.snapshot_bytes = sum(
                         s.payload_bytes for s in self._snapshots)
                 else:
@@ -339,15 +421,81 @@ class ServeJob:
         else:
             in_flight = self._in_flight_modeled()
             if self.migrate:
+                self._slots = self._slots + self._parked
+                self._parked = []
+                self._active_cap = self.batch
                 self.snapshot_tokens = in_flight
-                self.snapshot_bytes = self._modeled_snapshot_bytes(in_flight)
+                self.snapshot_bytes = sum(
+                    self._slot_bytes(s.progress) for s in self._slots)
             else:
                 self.last_preempt_dropped = in_flight
                 self.emitted -= in_flight
-                # the wave restarts from scratch on resume; its requests'
-                # latency keeps counting from the original wave start
+                for s in self._slots:
+                    s.progress = 0
+                    # the stream restarts from scratch on resume; its
+                    # request's latency keeps counting from the original
+                    # start (``started`` survives the drop)
         self.dropped_total += self.last_preempt_dropped
         return self.supervisor.preempted()
+
+    def _shed_to(self, max_slots: int) -> float:
+        """Proportional shed: park slots until at most ``max_slots`` stay
+        active (victims: fewest remaining tokens first).  Returns 0.0 —
+        no backoff, the job keeps running where it is."""
+        self.last_shed_slots = 0
+        self.last_shed_tokens = self.last_shed_bytes = 0
+        k = max(1, min(max_slots, self.batch))
+        if k >= self._active_cap:
+            return 0.0
+        n_shed = self._active_cap - k
+        if self.engine is not None:
+            self.engine.set_slot_limit(min(k, self.engine.batch_size))
+            victims = self.engine.select_victims(n_shed)
+            snaps = self.engine.drain(slots=victims) if victims else []
+            self._parked.extend(snaps)
+            # report the lanes actually drained: the engine may hold
+            # fewer occupied slots than the cap being shed
+            self.last_shed_slots = len(snaps)
+            self.last_shed_tokens = sum(
+                len(s.request.generated) for s in snaps)
+            self.last_shed_bytes = sum(s.payload_bytes for s in snaps)
+        else:
+            # fewest remaining tokens first == most progress first
+            order = sorted(range(len(self._slots)),
+                           key=lambda i: (-self._slots[i].progress, i))
+            chosen = set(order[:n_shed])
+            shed = [s for i, s in enumerate(self._slots) if i in chosen]
+            self._slots = [s for i, s in enumerate(self._slots)
+                           if i not in chosen]
+            self._parked.extend(shed)
+            self.last_shed_slots = len(shed)
+            self.last_shed_tokens = sum(s.progress for s in shed)
+            self.last_shed_bytes = sum(
+                self._slot_bytes(s.progress) for s in shed)
+        self._active_cap = k
+        return 0.0
+
+    def grow(self, max_slots: int) -> int:
+        """Raise the active-slot cap back toward ``capacity`` and
+        re-admit parked lanes (oldest first); returns the slots
+        unparked.  The inverse of ``preempt(max_slots=...)``, driven by
+        the scheduler as the budget recovers."""
+        k = min(max_slots, self.batch)
+        if k <= self._active_cap:
+            return 0
+        n = min(len(self._parked), k - self._active_cap)
+        unparked, self._parked = self._parked[:n], self._parked[n:]
+        self._active_cap = k
+        if self.engine is not None:
+            self.engine.set_slot_limit(min(k, self.engine.batch_size))
+            if unparked and self._started:
+                self.engine.restore(unparked)
+            elif unparked:
+                # between stints: rejoin the snapshot set for the resume
+                self._snapshots = (self._snapshots or []) + unparked
+        else:
+            self._slots.extend(unparked)
+        return n
 
 
 @dataclasses.dataclass
@@ -363,13 +511,21 @@ class FleetScheduler:
 
     ``min_node_w`` is the watts a node must be guaranteed before placing
     work on it: its physical floor (idle draw can't be capped away) plus a
-    useful-work margin.  ``tick`` reconciles the fleet each control
-    quantum: resume eligible preempted jobs, preempt while the envelope is
-    over-subscribed, admit while it has headroom."""
+    useful-work margin.  ``margin_w`` names the margin part of that sum;
+    for a partial-capable serve job the margin scales with its ACTIVE
+    slots (``min_node_w - margin_w + margin_w * active/capacity``) — the
+    mechanism that makes preemption proportional: shedding a slot gives
+    back ``margin_w / capacity`` watts without surrendering the node.
 
-    def __init__(self, jobs, min_node_w: float):
+    ``tick`` reconciles the fleet each control quantum: shed slots /
+    preempt while the envelope is over-subscribed, resume eligible
+    preempted jobs (snapshot carriers with placement affinity), regrow
+    partially shed jobs into recovered headroom, admit fresh work."""
+
+    def __init__(self, jobs, min_node_w: float, margin_w: float = 0.0):
         self.queue: deque[Job] = deque(jobs)
         self.min_node_w = min_node_w
+        self.margin_w = margin_w
         self.paused: list[_Paused] = []
         self.completed: list[Job] = []
 
@@ -377,33 +533,92 @@ class FleetScheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or bool(self.paused)
 
-    def fits(self, n_busy: int, budget_w: float) -> bool:
-        """Whether the envelope supports one MORE busy node."""
-        return (n_busy + 1) * self.min_node_w <= budget_w
+    def node_min_w(self, node) -> float:
+        """Watts this busy node needs under the envelope: the full
+        floor+margin, except that a partial-capable serve job only needs
+        margin for the slots it actually decodes."""
+        job = getattr(node, "job", None)
+        if (job is not None and self.margin_w > 0
+                and getattr(job, "partial_capable", False)):
+            cap = max(getattr(job, "capacity", 1), 1)
+            k = getattr(job, "active_cap", cap)
+            return self.min_node_w - self.margin_w \
+                + self.margin_w * k / cap
+        return self.min_node_w
+
+    def _busy_need(self, cluster) -> float:
+        return sum(self.node_min_w(n) for n in cluster.busy_nodes())
 
     def complete(self, job: Job) -> None:
         job.supervisor.completed("done")
         self.completed.append(job)
 
+    @staticmethod
+    def _place(cluster, free, origin: str, snap_bytes: int):
+        """Placement affinity: a snapshot carrier prefers its ORIGIN node
+        (no transfer at all), else the free node behind the cheapest
+        interconnect link from the origin (ties by name); jobs without a
+        snapshot take the first free node as before."""
+        if not snap_bytes or not origin:
+            return free[0]
+        for n in free:
+            if n.name == origin:
+                return n
+        cost = getattr(cluster, "transfer_seconds", None)
+        if cost is None:
+            return free[0]
+        return min(free, key=lambda n: (cost(origin, n.name, snap_bytes),
+                                        n.name))
+
     def tick(self, t: float, cluster, budget_w: float) -> dict:
         """One scheduling round; returns ``{"admitted": [...],
-        "preempted": [...], "migrations": [...], "dropped_tokens": N}``
-        (job names / migration records, deterministic order)."""
+        "preempted": [...], "migrations": [...], "partials": [...],
+        "unparked": [...], "dropped_tokens": N, "kept_tokens": N}``
+        (job names / event records, deterministic order)."""
         admitted, preempted, migrations = [], [], []
+        partials, unparked = [], []
         dropped_tokens = kept_tokens = 0
 
-        # 1. preempt while the shrunken envelope can't float the busy set:
+        # 1. shed while the shrunken envelope can't float the busy set:
         #    lowest token-value first (a background train token is shed
         #    before a paid serve token), train before serve at equal
-        #    value (they checkpoint), LIFO each.
+        #    value (they checkpoint), LIFO each.  A partial-capable
+        #    victim sheds the MINIMAL slot set that fits the shortfall
+        #    (ceil(deficit / margin-per-slot)) and keeps serving; only
+        #    when it is down to one slot — or cannot shed — is it
+        #    suspended whole.
         busy = cluster.busy_nodes()
-        while busy and len(busy) * self.min_node_w > budget_w:
+        need = self._busy_need(cluster)
+        while busy and need > budget_w + 1e-9:
             victims = sorted(
                 busy, key=lambda n: (getattr(n.job, "value", 1.0),
                                      n.job.kind != "train", -n.assigned_at,
                                      n.name))
             node = victims[0]
-            job = node.release()
+            job = node.job
+            k_shed = 0
+            if (self.margin_w > 0
+                    and getattr(job, "partial_capable", False)
+                    and getattr(job, "active_cap", 1) > 1):
+                per_slot = self.margin_w / max(job.capacity, 1)
+                k_shed = int(math.ceil((need - budget_w) / per_slot))
+            if 0 < k_shed <= job.active_cap - 1:
+                # the shortfall fits inside this victim's batch: shed the
+                # minimal slot set and keep it serving.  A deeper deficit
+                # (e.g. a dip below the node floor, which no shed can
+                # return) suspends the victim whole instead.
+                job.preempt(max_slots=job.active_cap - k_shed)
+                if hasattr(node, "refit"):
+                    node.refit()    # the power session re-fits the
+                                    # shrunken batch's task profile
+                partials.append({
+                    "job": job.name, "node": node.name,
+                    "slots": job.last_shed_slots,
+                    "tokens": job.last_shed_tokens,
+                    "bytes": job.last_shed_bytes})
+                need = self._busy_need(cluster)
+                continue
+            node.release()
             backoff = job.preempt()
             dropped_tokens += getattr(job, "last_preempt_dropped", 0)
             kept_tokens += getattr(job, "snapshot_tokens", 0)
@@ -411,27 +626,38 @@ class FleetScheduler:
                                        origin=node.name))
             preempted.append(job.name)
             busy = cluster.busy_nodes()
+            need = self._busy_need(cluster)
 
-        # 2. resume eligible paused jobs ahead of fresh queue work
-        #    (oldest eligibility first, then name, for determinism).  A
-        #    job carrying a snapshot that lands on a different node pays
-        #    the migration transfer on that node's clock.
-        self.paused.sort(key=lambda p: (p.eligible_at, p.job.name))
+        # 2. resume eligible paused jobs ahead of fresh queue work —
+        #    highest token-value first (the mirror of the preemption
+        #    order: the most valuable work reclaims watts first), then
+        #    oldest eligibility, then name, for determinism.  Placement
+        #    is origin-affine: a snapshot carrier resumes on its origin
+        #    node when free (no transfer), else on the free node behind
+        #    the cheapest link — and only a cross-node landing pays the
+        #    migration transfer on that node's clock.
+        self.paused.sort(key=lambda p: (-getattr(p.job, "value", 1.0),
+                                        p.eligible_at, p.job.name))
         for p in list(self.paused):
             if p.eligible_at > t:
-                break
+                continue
             free = cluster.free_nodes()
-            if not free or not self.fits(len(cluster.busy_nodes()),
-                                         budget_w):
+            if not free or need + self.min_node_w > budget_w + 1e-9:
                 break
+            snap_bytes = getattr(p.job, "snapshot_bytes", 0)
+            node = self._place(cluster, free, p.origin, snap_bytes)
             self.paused.remove(p)
-            node = free[0]
             node.assign(p.job, t)
             admitted.append(p.job.name)
-            snap_bytes = getattr(p.job, "snapshot_bytes", 0)
+            need += self.node_min_w(node)
             if snap_bytes and node.name != p.origin:
-                mig_s = (cluster.migration_seconds(snap_bytes)
-                         if hasattr(cluster, "migration_seconds") else 0.0)
+                if hasattr(cluster, "transfer_seconds"):
+                    mig_s = cluster.transfer_seconds(p.origin, node.name,
+                                                     snap_bytes)
+                elif hasattr(cluster, "migration_seconds"):
+                    mig_s = cluster.migration_seconds(snap_bytes)
+                else:
+                    mig_s = 0.0
                 node.local_t += mig_s    # the transfer occupies the node
                 migrations.append({
                     "job": p.job.name, "from": p.origin, "to": node.name,
@@ -441,16 +667,45 @@ class FleetScheduler:
                 p.job.snapshot_bytes = 0
                 p.job.snapshot_tokens = 0
 
+        # 2b. regrow partially shed jobs into recovered headroom: parked
+        #     slots are paid-for in-flight work and re-admit at
+        #     margin_w/capacity watts each — the proportional inverse of
+        #     step 1 (an all-or-nothing resume would wait for a whole
+        #     node's worth of headroom instead).
+        if self.margin_w > 0:
+            for node in sorted(cluster.busy_nodes(), key=lambda n: n.name):
+                job = node.job
+                if not getattr(job, "partial_capable", False):
+                    continue
+                cap = max(getattr(job, "capacity", 1), 1)
+                k = getattr(job, "active_cap", cap)
+                if k >= cap:
+                    continue
+                per_slot = self.margin_w / cap
+                k_more = min(cap - k,
+                             int((budget_w - need) / per_slot + 1e-9))
+                if k_more <= 0:
+                    continue
+                restored = job.grow(k + k_more)
+                if hasattr(node, "refit"):
+                    node.refit()
+                need += k_more * per_slot
+                # "slots" = lanes actually re-admitted (what telemetry
+                # counts); the cap may grow further than the parked list
+                unparked.append({"job": job.name, "node": node.name,
+                                 "slots": restored, "cap": k + k_more})
+
         # 3. admit fresh jobs FCFS while nodes and watts allow
         while self.queue:
             free = cluster.free_nodes()
-            if not free or not self.fits(len(cluster.busy_nodes()),
-                                         budget_w):
+            if not free or need + self.min_node_w > budget_w + 1e-9:
                 break
             job = self.queue.popleft()
             free[0].assign(job, t)
+            need += self.node_min_w(free[0])
             admitted.append(job.name)
 
         return {"admitted": admitted, "preempted": preempted,
-                "migrations": migrations, "dropped_tokens": dropped_tokens,
+                "migrations": migrations, "partials": partials,
+                "unparked": unparked, "dropped_tokens": dropped_tokens,
                 "kept_tokens": kept_tokens}

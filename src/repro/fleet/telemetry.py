@@ -56,6 +56,11 @@ class FleetTelemetry:
         self.migrated_tokens = 0     # in-flight work preserved by drains
         self.migration_bytes = 0     # snapshot payload moved cross-node
         self.migration_s = 0.0       # virtual seconds spent transferring
+        # -- proportional preemption: shed slot-by-slot, not job-by-job ----
+        self.partial_drains = 0      # shed events (job kept its node)
+        self.shed_slots = 0          # slots parked across all sheds
+        self.parked_tokens = 0       # in-flight tokens parked at shed time
+        self.unparked_slots = 0      # slots re-admitted as budget recovered
         self.by_kind: dict[str, dict[str, float]] = {}
 
     # -- feeds -------------------------------------------------------------
@@ -98,6 +103,18 @@ class FleetTelemetry:
         self.migration_bytes += nbytes
         self.migration_s += seconds
 
+    def record_partial(self, slots: int, tokens: int) -> None:
+        """A proportional preemption: ``slots`` lanes drained and parked
+        locally (their ``tokens`` in-flight work preserved) while the
+        job's survivors kept serving on the same node."""
+        self.partial_drains += 1
+        self.shed_slots += slots
+        self.parked_tokens += tokens
+
+    def record_unpark(self, slots: int) -> None:
+        """Recovered headroom re-admitted ``slots`` parked lanes."""
+        self.unparked_slots += slots
+
     def record_completion(self) -> None:
         self.completions += 1
 
@@ -120,6 +137,10 @@ class FleetTelemetry:
             "migrated_tokens": self.migrated_tokens,
             "migration_bytes": self.migration_bytes,
             "migration_s": self.migration_s,
+            "partial_drains": self.partial_drains,
+            "shed_slots": self.shed_slots,
+            "parked_tokens": self.parked_tokens,
+            "unparked_slots": self.unparked_slots,
             "j_per_token": (self.energy_j / self.tokens
                             if self.tokens else 0.0),
             "by_kind": {k: dict(v) for k, v in sorted(self.by_kind.items())},

@@ -87,6 +87,25 @@ def slot_scatter(a, sub, slot, *, axis=1, mode="reference"):
     return ref.slot_scatter_ref(a, sub, slot, axis=axis)
 
 
+def int8_quantize(a, *, axis=-1, mode="reference"):
+    """Symmetric per-row int8 quantization: (q int8, scale f32 kept-dim
+    over ``axis``).  Shared by the MoE ``_a2a_int8`` wire format and the
+    at-rest snapshot-payload compression (``repro.models.lm.export_slot``).
+
+    Every mode routes to the jnp implementation: the absmax reduce, the
+    scale divide and the int8 cast fuse into one XLA pass over the array —
+    a bandwidth-bound elementwise pipeline a hand Pallas kernel cannot
+    improve on (same argument as ``slot_gather``)."""
+    del mode
+    return ref.int8_quantize_ref(a, axis=axis)
+
+
+def int8_dequantize(q, scale, dtype, *, mode="reference"):
+    """Inverse of ``int8_quantize``: q * scale cast to ``dtype``."""
+    del mode
+    return ref.int8_dequantize_ref(q, scale, dtype)
+
+
 def ssd(x, dt, A, B, C, D=None, h0=None, *, chunk=128, mode="reference"):
     """Mamba-2 SSD scan. Returns (y, final_state)."""
     if mode in ("pallas", "pallas_interpret"):

@@ -158,6 +158,25 @@ def slot_scatter_ref(a, sub, slot, axis: int = 1):
         a, sub.astype(a.dtype), slot, axis=axis)
 
 
+def int8_quantize_ref(a, axis: int = -1):
+    """Symmetric per-row int8 quantization oracle: ``scale`` is the row's
+    absmax over ``axis`` divided by 127 (f32 sidecar, kept-dim), ``q`` the
+    rounded/clipped int8 payload.  The row absmax maps to exactly +-127,
+    so the worst-case reconstruction error is ``scale / 2 = absmax / 254``
+    per element (plus the storage dtype's own rounding on dequantize) —
+    the error budget ``tests/test_migration.py`` asserts per leaf."""
+    f = a.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(f), axis=axis, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(f / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize_ref(q, scale, dtype):
+    """Inverse of ``int8_quantize_ref``: q * scale, cast to ``dtype``."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
 # ===========================================================================
 # mamba-2 SSD (state-space duality)
 # ===========================================================================

@@ -21,7 +21,8 @@ from repro.power import available_metrics
 
 
 def default_jobs(arch: str, n: int, serve_value: float = 1.0,
-                 migrate: bool = True) -> list:
+                 migrate: bool = True, partial: bool = False,
+                 snapshot_int8: bool = False) -> list:
     """A heterogeneous queue: compute-bound training, decode-heavy
     serving (memory-bound) and prefill-heavy serving, round-robin."""
     cfg = get_model_config(arch)
@@ -35,12 +36,16 @@ def default_jobs(arch: str, n: int, serve_value: float = 1.0,
             jobs.append(ServeJob(f"serve-decode-{i}", cfg, batch=64,
                                  prompt=2048, new_tokens=512,
                                  total_requests=10**9, decode_chunk=32,
-                                 value=serve_value, migrate=migrate))
+                                 value=serve_value, migrate=migrate,
+                                 partial=partial,
+                                 snapshot_int8=snapshot_int8))
         else:
             jobs.append(ServeJob(f"serve-prefill-{i}", cfg, batch=16,
                                  prompt=8192, new_tokens=32,
                                  total_requests=10**9, decode_chunk=32,
-                                 value=serve_value, migrate=migrate))
+                                 value=serve_value, migrate=migrate,
+                                 partial=partial,
+                                 snapshot_int8=snapshot_int8))
     return jobs
 
 
@@ -68,9 +73,22 @@ def main() -> None:
     ap.add_argument("--no-migrate", action="store_true",
                     help="drop-and-restart preempted serve jobs instead of "
                          "draining/restoring their slot snapshots")
+    ap.add_argument("--partial", action="store_true",
+                    help="proportional preemption: serve jobs shed only "
+                         "the slots a shrinking envelope strands (parked "
+                         "locally, re-admitted as the budget recovers) "
+                         "instead of suspending whole")
+    ap.add_argument("--snapshot-int8", action="store_true",
+                    help="int8-compress snapshot payloads at rest "
+                         "(roughly halves migration bytes/seconds at a "
+                         "bounded parity cost)")
     ap.add_argument("--cabinet-ceil", type=float, default=None,
                     help="busbar/cooling ceiling per cabinet (watts), "
                          "enforced as a middle weighted_split level")
+    ap.add_argument("--cross-cabinet-bw", type=float, default=None,
+                    help="cross-cabinet link bandwidth (B/s) for snapshot "
+                         "transfers (default: ICI/4); placement affinity "
+                         "prefers origin, then the cheapest link")
     args = ap.parse_args()
 
     p_max = args.nodes * DEFAULT_SUPERCHIP.p_max
@@ -81,11 +99,14 @@ def main() -> None:
     cluster = SimulatedCluster(
         n_nodes=args.nodes, cabinet_size=args.cabinet_size,
         metric=args.power_metric, policy=args.policy,
-        quantum_s=args.quantum, cabinet_ceil_w=args.cabinet_ceil)
+        quantum_s=args.quantum, cabinet_ceil_w=args.cabinet_ceil,
+        cross_cabinet_bw=args.cross_cabinet_bw)
     jobs = default_jobs(args.arch, args.jobs
                         if args.jobs is not None else args.nodes,
                         serve_value=args.serve_value,
-                        migrate=not args.no_migrate)
+                        migrate=not args.no_migrate,
+                        partial=args.partial,
+                        snapshot_int8=args.snapshot_int8)
     print(f"[fleet] {args.nodes} nodes / {args.policy} steering; budget "
           f"{' -> '.join(f'{w:.0f}W' for _, w in trace)} over "
           f"{args.duration:.0f}s")
@@ -104,6 +125,11 @@ def main() -> None:
               f"{counters['migrations']} cross-node transfers "
               f"({counters['migration_bytes'] / 1e6:.1f} MB, "
               f"{counters['migration_s'] * 1e3:.1f} ms on the wire)")
+    if counters["partial_drains"]:
+        print(f"[partial] {counters['partial_drains']} proportional sheds: "
+              f"{counters['shed_slots']} slots parked "
+              f"({counters['parked_tokens']} in-flight tokens preserved), "
+              f"{counters['unparked_slots']} re-admitted on recovery")
     if cluster.allocations:
         last = cluster.allocations[-1]
         print("[grants] " + ", ".join(

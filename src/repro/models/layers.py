@@ -513,14 +513,12 @@ def _a2a_int8(t):
 
 
 def _a2a_int8_fwd(t):
-    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1,
-                    keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127
-                 ).astype(jnp.int8)
+    # scale-per-row int8 wire format, shared with the at-rest snapshot
+    # compression in repro.models.lm.quantize_payload
+    q, scale = ops.int8_quantize(t)
     q_x = jax.lax.all_to_all(q, "model", 0, 0, tiled=False)
     s_x = jax.lax.all_to_all(scale, "model", 0, 0, tiled=False)
-    return (q_x.astype(jnp.float32) * s_x).astype(t.dtype), None
+    return ops.int8_dequantize(q_x, s_x, t.dtype), None
 
 
 def _a2a_int8_bwd(_, g):

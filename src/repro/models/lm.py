@@ -528,8 +528,72 @@ def cache_slot_spec(cfg: ModelConfig) -> dict[str, str]:
     raise ValueError(f"{cfg.family} has no decode cache (encoder-only)")
 
 
+@jax.tree_util.register_pytree_node_class
+class QuantizedLeaf:
+    """One payload leaf compressed at rest: per-row symmetric int8 with an
+    f32 scale sidecar (the ``_a2a_int8`` wire trick applied to storage).
+
+    The original dtype travels as static aux data so ``dequantize_payload``
+    can restore the exact leaf type.  Registered as a pytree node, so
+    ``jax.tree`` traversals (device_get, ``slot_payload_bytes``) see the
+    int8 payload and the scale as ordinary leaves — the on-wire size of a
+    quantized payload is therefore counted exactly (q bytes + scale
+    bytes ~= half the raw bf16 bytes for head_dim-sized rows)."""
+
+    def __init__(self, q, scale, dtype: str):
+        self.q, self.scale, self.dtype = q, scale, str(dtype)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.dtype
+
+    @classmethod
+    def tree_unflatten(cls, dtype, children):
+        return cls(children[0], children[1], dtype)
+
+    def __repr__(self):
+        return (f"QuantizedLeaf(q={getattr(self.q, 'shape', None)}, "
+                f"dtype={self.dtype})")
+
+
+def quantize_payload(payload):
+    """int8-compress every leaf of an ``export_slot`` payload (per-row
+    scale over the last axis — head_dim for KV rows, the state feature
+    axis for Mamba lanes).  Lossy: worst-case per-element error is the
+    row absmax / 254 plus the storage dtype's own rounding — the error
+    budget documented in docs/fleet.md and asserted per leaf in
+    tests/test_migration.py."""
+    return jax.tree.map(
+        lambda a: QuantizedLeaf(*ops.int8_quantize(a), dtype=a.dtype),
+        payload)
+
+
+def dequantize_payload(payload):
+    """Undo ``quantize_payload`` (identity on raw payloads)."""
+    return jax.tree.map(
+        lambda x: (ops.int8_dequantize(jnp.asarray(x.q),
+                                       jnp.asarray(x.scale), x.dtype)
+                   if isinstance(x, QuantizedLeaf) else x),
+        payload, is_leaf=lambda x: isinstance(x, QuantizedLeaf))
+
+
+def payload_is_quantized(payload) -> bool:
+    return any(isinstance(x, QuantizedLeaf)
+               for x in jax.tree.leaves(
+                   payload, is_leaf=lambda x: isinstance(x, QuantizedLeaf)))
+
+
+def int8_payload_ratio(cfg: ModelConfig, itemsize: int = 2) -> float:
+    """Modeled on-wire size ratio of an int8-quantized payload vs raw:
+    1 int8 byte per element plus a 4-byte f32 scale per ``head_dim`` row,
+    over ``itemsize`` raw bytes per element.  Used by the engineless
+    ``ServeJob`` to model compressed snapshot transfers; the real payload
+    ratio is measured by ``slot_payload_bytes`` over quantized leaves."""
+    row = max(int(getattr(cfg, "head_dim", 64) or 64), 1)
+    return (1.0 + 4.0 / row) / float(itemsize)
+
+
 def export_slot(cfg: ModelConfig, cache, slot: int, kv_len: int,
-                mode: str = "reference") -> dict:
+                mode: str = "reference", quantize: bool = False) -> dict:
     """Lift slot ``slot``'s state out of a batched decode cache.
 
     Returns a payload pytree mirroring the cache structure with the batch
@@ -537,7 +601,11 @@ def export_slot(cfg: ModelConfig, cache, slot: int, kv_len: int,
     (the only rows attention can ever read at this fill), "state" leaves
     travel whole.  The payload is engine-geometry-free — it can be
     installed into any slot of any cache built from the same ``cfg``
-    whose ``max_seq`` accommodates the request (``import_slot``)."""
+    whose ``max_seq`` accommodates the request (``import_slot``).
+
+    ``quantize=True`` compresses the payload at rest (``quantize_payload``:
+    per-row int8 + f32 scale, roughly halving the on-wire bytes at a
+    bounded parity cost); ``import_slot`` dequantizes transparently."""
     if kv_len < 0:
         raise ValueError(f"kv_len must be >= 0, got {kv_len}")
     spec = cache_slot_spec(cfg)
@@ -555,7 +623,7 @@ def export_slot(cfg: ModelConfig, cache, slot: int, kv_len: int,
                                  f"of {key}")
             lane = jax.tree.map(lambda a: a[:, :kv_len], lane)
         payload[key] = lane
-    return payload
+    return quantize_payload(payload) if quantize else payload
 
 
 def import_slot(cfg: ModelConfig, cache, payload, slot: int,
@@ -566,8 +634,11 @@ def import_slot(cfg: ModelConfig, cache, payload, slot: int,
     the whole lane is overwritten (rows past the payload's kv_len are
     masked by the per-slot kv_len until decode writes them); "state"
     leaves overwrite the lane as-is.  The destination may have any batch
-    size and any ``max_seq`` >= the payload's kv_len.  Returns the
-    updated cache."""
+    size and any ``max_seq`` >= the payload's kv_len.  Quantized payloads
+    (``export_slot(..., quantize=True)``) are dequantized here — at
+    install time, so the payload stays int8 at rest and on the wire.
+    Returns the updated cache."""
+    payload = dequantize_payload(payload)
     spec = cache_slot_spec(cfg)
     if set(spec) != set(payload) or set(spec) != set(cache):
         raise ValueError(f"payload keys {sorted(payload)} do not match the "

@@ -42,10 +42,11 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.core.tasks import Task
 from repro.models import lm
 from repro.models.layers import Ctx
-from repro.serving.scheduler import (Request, SlotScheduler, chunk_plan)
+from repro.serving.scheduler import (Request, SlotScheduler, chunk_plan,
+                                     fewest_remaining)
 
 __all__ = ["Request", "ServeEngine", "SlotSnapshot", "serve_phase_tasks",
-           "make_prefill_step", "make_decode_step",
+           "fewest_remaining", "make_prefill_step", "make_decode_step",
            "make_prefill_chunk_step", "make_decode_chunk_step"]
 
 
@@ -281,11 +282,24 @@ class ServeEngine:
     config, including one with a different ``batch_size``/``max_seq``.
     ``start``/``step`` are thin wrappers over the same admission machinery
     — a step installs restored slots first, then prefills fresh ones.
+
+    Preemption is also PROPORTIONAL: ``drain(slots=[...])`` sheds only the
+    named slots (victims picked by ``select_victims`` under the engine's
+    ``victim_policy``, default fewest-remaining-tokens-first) while every
+    surviving slot keeps decoding bit-identically, and ``set_slot_limit``
+    pins the shed capacity down so freed lanes don't instantly refill.
+
+    ``snapshot_int8=True`` compresses warm payloads at rest (per-row int8
+    + f32 scale — ``models.lm.quantize_payload``), roughly halving
+    ``payload_bytes`` at a bounded parity cost (restores are then no
+    longer bit-exact; the per-leaf error budget is documented in
+    docs/fleet.md).
     """
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, ctx: Ctx, params,
                  batch_size: int = 4, max_seq: int = 256, power=None,
-                 prefill_chunk: int = 32, decode_chunk: int = 8):
+                 prefill_chunk: int = 32, decode_chunk: int = 8,
+                 snapshot_int8: bool = False, victim_policy=None):
         if cfg.family == "audio":
             raise ValueError("encoder-only arch has no decode path")
         prefill_chunk = min(prefill_chunk, max_seq)
@@ -300,6 +314,8 @@ class ServeEngine:
         self.power = power   # Optional[repro.power.PowerManager]
         self.prefill_chunk = prefill_chunk
         self.decode_chunk = decode_chunk
+        self.snapshot_int8 = snapshot_int8
+        self.victim_policy = victim_policy or fewest_remaining
         # jit caches one program per (1, chunk_size) token shape — the
         # chunk_plan power-of-two sizes bound the trace count
         self._prefill_step = jax.jit(make_prefill_chunk_step(cfg, run, ctx))
@@ -311,6 +327,9 @@ class ServeEngine:
         # warm snapshots awaiting a free slot (restored ahead of fresh
         # admissions — they carry finished work)
         self._restore_q: deque[SlotSnapshot] = deque()
+        # occupancy cap surviving drain/restore cycles (partial preemption
+        # pins it below batch_size so shed lanes stay empty)
+        self._slot_limit = batch_size
         # transfer seam: tests swap this for a counting double to assert
         # the one-sync-per-chunk contract
         self._fetch = jax.device_get
@@ -352,6 +371,7 @@ class ServeEngine:
             return
         self._t0 = time.perf_counter()
         self._sched = SlotScheduler(self.batch_size)
+        self._sched.set_limit(self._slot_limit)
         B = self.batch_size
         self._cache = lm.init_cache(self.ctx, self.cfg, B, self.max_seq)
         self._cur = jnp.zeros((B,), jnp.int32)
@@ -381,35 +401,90 @@ class ServeEngine:
         self._ensure_stream()
         self._sched.submit(requests)
 
-    def drain(self) -> list[SlotSnapshot]:
-        """Stop the stream LOSSLESSLY: every in-flight slot is exported
-        as a warm ``SlotSnapshot`` (cache lane + decode cursor, one host
-        sync for the cursor vectors), every queued / not-yet-installed
-        request as a cold one.  The engine is left idle (``pending`` is
-        False) and the snapshots can be ``restore``d here or on any
-        engine with the same model config — preemption becomes a drain,
-        not a discard."""
+    def _export_slots(self, sched, chosen) -> list[SlotSnapshot]:
+        """Export ``chosen`` active slots as warm snapshots (two host
+        syncs total: the cursor vectors, then every payload in one
+        stacked transfer) and release them from the scheduler."""
+        if not chosen:
+            return []
+        # sync 1: the cursor vectors (kv_len gates the payload slice)
+        cur, index, rem = self._fetch(
+            (self._cur, self._index, self._rem))
+        # sync 2: every slot's payload in ONE stacked transfer (quantized
+        # on device first when snapshot_int8 — half the bytes cross)
+        payloads = self._fetch([
+            lm.export_slot(self.cfg, self._cache, slot.sid,
+                           int(index[slot.sid]),
+                           quantize=self.snapshot_int8)
+            for slot in chosen])
+        self.sync_count += 2
+        snaps = []
+        for slot, payload in zip(list(chosen), payloads):
+            snaps.append(SlotSnapshot(
+                request=slot.request, rem=int(rem[slot.sid]),
+                kv_len=int(index[slot.sid]), cur=int(cur[slot.sid]),
+                payload=payload))
+            sched.release(slot)
+        return snaps
+
+    def select_victims(self, n: int) -> list[int]:
+        """Slot ids of the ``n`` partial-drain victims the engine's
+        ``victim_policy`` picks (default: fewest remaining tokens first)
+        — the ``slots=`` argument a proportional ``drain`` wants."""
+        sched = getattr(self, "_sched", None)
+        if sched is None or n <= 0:
+            return []
+        return [s.sid for s in self.victim_policy(sched.active())[:n]]
+
+    def set_slot_limit(self, limit: int) -> None:
+        """Cap concurrent occupancy below ``batch_size`` (a partial
+        preemption sheds capacity, not just current occupants: freed
+        lanes must not refill from the queue until the cap is raised).
+        The cap survives drain/restore cycles."""
+        if not 1 <= limit <= self.batch_size:
+            raise ValueError(f"slot limit must be in [1, "
+                             f"{self.batch_size}], got {limit}")
+        self._slot_limit = limit
+        sched = getattr(self, "_sched", None)
+        if sched is not None:
+            sched.set_limit(limit)
+
+    @property
+    def slot_limit(self) -> int:
+        return self._slot_limit
+
+    def drain(self, slots=None) -> list[SlotSnapshot]:
+        """Stop the stream LOSSLESSLY — entirely, or slot by slot.
+
+        ``slots=None`` (full drain): every in-flight slot is exported as
+        a warm ``SlotSnapshot`` (cache lane + decode cursor), every
+        queued / not-yet-installed request as a cold one.  The engine is
+        left idle (``pending`` is False) and the snapshots can be
+        ``restore``d here or on any engine with the same model config —
+        preemption becomes a drain, not a discard.
+
+        ``slots=[sid, ...]`` (partial drain): ONLY the named slots are
+        exported and their decode lanes masked; every surviving slot
+        keeps decoding bit-identically to an unpreempted run (per-slot
+        cache state is independent — the same property that makes
+        continuous batching match solo decoding).  The stream stays up;
+        pair with ``set_slot_limit`` to keep the shed lanes empty."""
         sched = getattr(self, "_sched", None)
         if sched is None:
             return []
-        snaps: list[SlotSnapshot] = []
-        active = sched.active()
-        if active:
-            # sync 1: the cursor vectors (kv_len gates the payload slice)
-            cur, index, rem = self._fetch(
-                (self._cur, self._index, self._rem))
-            # sync 2: every slot's payload in ONE stacked transfer
-            payloads = self._fetch([
-                lm.export_slot(self.cfg, self._cache, slot.sid,
-                               int(index[slot.sid]))
-                for slot in active])
-            self.sync_count += 2
-            for slot, payload in zip(list(active), payloads):
-                snaps.append(SlotSnapshot(
-                    request=slot.request, rem=int(rem[slot.sid]),
-                    kv_len=int(index[slot.sid]), cur=int(cur[slot.sid]),
-                    payload=payload))
-                sched.release(slot)
+        if slots is not None:
+            want = set(slots)
+            chosen = [s for s in sched.active() if s.sid in want]
+            snaps = self._export_slots(sched, chosen)
+            if snaps:
+                # mask the drained lanes: done slots write at max_seq
+                # (dropped) and emit nothing — survivors are untouched
+                sids = jnp.asarray([s.sid for s in chosen], jnp.int32)
+                self._done = self._done.at[sids].set(True)
+                self._rem = self._rem.at[sids].set(0)
+                self._cur = self._cur.at[sids].set(0)
+            return snaps
+        snaps = self._export_slots(sched, sched.active())
         snaps.extend(self._restore_q)
         self._restore_q.clear()
         snaps.extend(SlotSnapshot(request=req,

@@ -66,14 +66,38 @@ def chunk_plan(length: int, max_chunk: int) -> list[int]:
     return plan
 
 
+def fewest_remaining(slots: list[Slot]) -> list[Slot]:
+    """Default drain-victim policy: order active slots by fewest tokens
+    still owed (``max_new_tokens`` minus tokens delivered), ties by slot
+    id.  A nearly-done victim parks the least future work behind the
+    pause, and its resume stint converts into a completion (a freed slot)
+    fastest — so a proportional preemption strands the minimum owed
+    tokens for the slots it sheds."""
+    return sorted(slots,
+                  key=lambda s: (s.request.max_new_tokens - s.emitted,
+                                 s.sid))
+
+
 class SlotScheduler:
-    """Maps queued requests onto a fixed set of batch slots, FCFS."""
+    """Maps queued requests onto a fixed set of batch slots, FCFS.
+
+    ``limit`` caps how many slots may be OCCUPIED at once (default: all
+    of them).  A proportional preemption lowers the limit so drained
+    lanes stay empty instead of instantly refilling from the queue —
+    the engine sheds exactly the capacity the caller asked it to shed."""
 
     def __init__(self, n_slots: int):
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.slots = [Slot(i) for i in range(n_slots)]
         self.queue: deque[Request] = deque()
+        self.limit = n_slots
+
+    def set_limit(self, limit: int) -> None:
+        if not 1 <= limit <= len(self.slots):
+            raise ValueError(
+                f"slot limit must be in [1, {len(self.slots)}], got {limit}")
+        self.limit = limit
 
     # -- queue -------------------------------------------------------------
     def submit(self, requests) -> None:
@@ -88,16 +112,18 @@ class SlotScheduler:
         return [s for s in self.slots if not s.free]
 
     def admit_ready(self) -> list[Slot]:
-        """Fill free slots from the queue (FCFS); returns the slots
-        admitted this round.  Callable at any step — admission never
-        waits for the rest of the batch."""
+        """Fill free slots from the queue (FCFS) up to ``limit``; returns
+        the slots admitted this round.  Callable at any step — admission
+        never waits for the rest of the batch."""
         admitted = []
+        n_active = len(self.active())
         free = (s for s in self.slots if s.free)
         for slot in free:
-            if not self.queue:
+            if not self.queue or n_active >= self.limit:
                 break
             slot.request = self.queue.popleft()
             slot.emitted = 0
+            n_active += 1
             admitted.append(slot)
         return admitted
 
@@ -106,7 +132,10 @@ class SlotScheduler:
         FCFS queue — the restored-snapshot admission path, where the
         request arrives mid-generation and its slot state is installed
         by the engine instead of prefilled.  ``emitted`` resumes at the
-        tokens already delivered.  Returns None when no slot is free."""
+        tokens already delivered.  Returns None when no slot is free
+        (or the occupancy ``limit`` is reached)."""
+        if len(self.active()) >= self.limit:
+            return None
         for slot in self.slots:
             if slot.free:
                 slot.request = request

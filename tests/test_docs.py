@@ -1,0 +1,51 @@
+"""Documentation front door: the README exists, every relative link in
+README.md / docs/*.md resolves (including markdown anchors), and the
+docs name the real tier-1 verify command.  The same checker gates the
+CI docs job (``tools/check_doc_links.py``)."""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_doc_links", REPO / "tools" / "check_doc_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules.setdefault("check_doc_links", mod)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_front_door_files_exist():
+    for name in ("README.md", "docs/power_api.md", "docs/serving.md",
+                 "docs/fleet.md", "docs/benchmarks.md"):
+        assert (REPO / name).exists(), name
+
+
+def test_all_doc_links_resolve():
+    mod = _checker()
+    files = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md")),
+             REPO / "ROADMAP.md"]
+    problems = [msg for f in files for msg in mod.check_file(f)]
+    assert not problems, "\n".join(problems)
+
+
+def test_readme_names_the_tier1_command():
+    text = (REPO / "README.md").read_text()
+    assert "python -m pytest -x -q" in text
+    assert "docs/benchmarks.md" in text
+
+
+def test_checker_catches_broken_links(tmp_path):
+    mod = _checker()
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [missing](nope.md) and [anchor](#nowhere)\n"
+                   "# A Heading\n[ok](#a-heading)\n")
+    problems = mod.check_file(bad)
+    assert len(problems) == 2
+    good = tmp_path / "good.md"
+    good.write_text("[ext](https://example.com) [self](good.md)\n")
+    assert mod.check_file(good) == []

@@ -4,14 +4,20 @@ The acceptance contract of the migration refactor, at every layer:
 
   * models — ``export_slot``/``import_slot`` round-trip a slot's cache
     lane losslessly across caches of DIFFERENT batch size and max_seq
-    (hypothesis property over geometries);
+    (hypothesis property over geometries); int8-quantized payloads
+    reconstruct within the documented per-leaf error budget
+    (row absmax / 254 plus the storage dtype's rounding) at roughly
+    half the on-wire bytes;
   * serving — a request preempted mid-decode and restored (same engine,
     or an engine with different ``batch_size``/``max_seq``) emits
-    BIT-IDENTICAL tokens to an unpreempted run;
+    BIT-IDENTICAL tokens to an unpreempted run; a PARTIAL drain
+    (``drain(slots=...)``) shed the chosen victims while every
+    surviving slot continues bit-identically;
   * fleet — a preempted ``ServeJob`` re-queues with its snapshots,
-    resumes on another node, the cluster charges the snapshot transfer
-    on the virtual clock, and telemetry splits preemption cost into
-    migrated (preserved) vs dropped (destroyed) tokens.
+    resumes origin-affine (own node first, else the cheapest link),
+    the cluster charges the snapshot transfer at the LINK bandwidth on
+    the virtual clock, and a budget squeeze sheds the minimal slot set
+    (proportional preemption) instead of suspending whole jobs.
 """
 
 import dataclasses
@@ -287,19 +293,24 @@ def test_restored_slots_admit_before_fresh_requests():
 
 def _migration_scenario(migrate: bool):
     llama = get_model_config("llama3.2-3b")
+    # restart backoffs are staggered (training restarts from checkpoint
+    # near-instantly; a serve stint pays drain/restore setup): after a
+    # deep dip the trains reclaim the lowest-numbered nodes first, so
+    # the snapshot-carrying serves find their origin busy and must
+    # migrate over the cheapest link -> cross-node snapshot transfers
     jobs = [
-        TrainJob("train-0", llama, batch=8, seq=512, total_steps=10**9),
-        TrainJob("train-1", llama, batch=8, seq=512, total_steps=10**9),
         ServeJob("serve-0", llama, batch=32, prompt=1024, new_tokens=256,
                  total_requests=10**9, decode_chunk=32, value=4.0,
-                 migrate=migrate),
+                 migrate=migrate, backoff_s=2.5),
+        TrainJob("train-0", llama, batch=8, seq=512, total_steps=10**9,
+                 backoff_s=0.05),
         ServeJob("serve-1", llama, batch=32, prompt=1024, new_tokens=256,
                  total_requests=10**9, decode_chunk=32, value=4.0,
-                 migrate=migrate),
+                 migrate=migrate, backoff_s=2.5),
+        TrainJob("train-1", llama, batch=8, seq=512, total_steps=10**9,
+                 backoff_s=0.05),
     ]
-    # deep dips below even one node's floor preempt EVERYTHING; on each
-    # recovery the resume order re-places serve jobs first, onto nodes
-    # other than their origin -> cross-node snapshot migrations
+    # deep dips below even one node's floor preempt EVERYTHING
     p = 4 * N_PMAX
     trace = [(0.0, 0.8 * p), (5.0, 60.0), (7.0, 0.8 * p),
              (12.0, 60.0), (14.0, 0.8 * p)]
@@ -431,3 +442,337 @@ def test_cabinet_ceiling_enforced_in_allocations():
         assert alloc.cabinet_w["cab0"] <= 400.0 + 1e-6
         # the capped cabinet's slack was NOT stranded: cab1 got more
         assert alloc.cabinet_w["cab1"] >= alloc.cabinet_w["cab0"] - 1e-6
+
+
+# ===========================================================================
+# int8 snapshot compression: per-leaf error budget + byte halving
+# ===========================================================================
+
+def _int8_budget(a):
+    """The documented per-leaf error budget: row absmax / 254 (half a
+    quantization step) plus the storage dtype's own rounding."""
+    f = jnp.abs(jnp.asarray(a, jnp.float32))
+    rowmax = jnp.max(f, axis=-1, keepdims=True) if f.size else f
+    dtype_rel = 2.0 ** -8 if jnp.dtype(a.dtype).itemsize <= 2 else 2.0 ** -20
+    return rowmax * (1.0 / 254.0 + dtype_rel) + 1e-8
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=96),
+       st.sampled_from([0.01, 1.0, 300.0]))
+def test_int8_roundtrip_error_budget_property(seed, rows, cols, scale):
+    """quantize -> dequantize reconstructs every element within
+    absmax(row)/254 of the original (the half-step bound the row-max
+    scale guarantees), across shapes and magnitudes."""
+    from repro.kernels import ops
+    a = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols),
+                          jnp.float32) * scale
+    q, s = ops.int8_quantize(a)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    d = ops.int8_dequantize(q, s, a.dtype)
+    assert d.dtype == a.dtype
+    assert bool(jnp.all(jnp.abs(d - a) <= _int8_budget(a)))
+
+
+@pytest.mark.parametrize("arch", SCHEMA_ARCHS)
+def test_quantized_payload_error_budget_per_leaf(arch):
+    """export_slot(quantize=True) reconstructs every payload leaf within
+    the per-leaf budget, for every cache schema (KV rows, local/global
+    pairs, Mamba state, hybrid)."""
+    cfg, run, ctx, _ = _setup(arch)
+    cache = _filled_cache(ctx, cfg, 2, 16, seed=3)
+    raw = lm.export_slot(cfg, cache, 1, 8)
+    quant = lm.export_slot(cfg, cache, 1, 8, quantize=True)
+    assert lm.payload_is_quantized(quant) and not lm.payload_is_quantized(raw)
+    deq = lm.dequantize_payload(quant)
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(raw),
+            jax.tree_util.tree_leaves_with_path(deq)):
+        assert a.shape == b.shape and a.dtype == b.dtype, path
+        assert bool(jnp.all(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32))
+            <= _int8_budget(a))), (arch, path)
+
+
+def test_quantized_payload_roughly_halves_bytes():
+    """The on-wire size of a quantized payload (int8 + f32 scale per
+    row) is about half the raw bf16/2-byte payload — the ratio the
+    migration benchmark's int8 arm gates at +-10%."""
+    cfg, run, ctx, _ = _setup("llama3.2-3b")
+    cache = _filled_cache(ctx, cfg, 2, 32, seed=5)
+    raw = lm.slot_payload_bytes(lm.export_slot(cfg, cache, 0, 32))
+    quant = lm.slot_payload_bytes(
+        lm.export_slot(cfg, cache, 0, 32, quantize=True))
+    itemsize = max(jnp.dtype(a.dtype).itemsize for a in jax.tree.leaves(
+        lm.export_slot(cfg, cache, 0, 1)))
+    expect = lm.int8_payload_ratio(cfg, itemsize=itemsize)
+    # head_dim rows carry a 4-byte scale each: ratio = (1 + 4/hd)/itemsize
+    assert abs(quant / raw - expect) < 0.02
+    # import dequantizes transparently: the cache accepts the payload
+    dst = lm.init_cache(ctx, cfg, 2, 32)
+    out = lm.import_slot(cfg, dst, lm.export_slot(cfg, cache, 0, 32,
+                                                  quantize=True), 1)
+    assert set(out) == set(dst)
+
+
+def test_int8_drained_stream_stays_within_budget_end_to_end():
+    """An int8 drain/restore is NOT bit-exact (lossy at rest), but the
+    restored engine must accept the payload and finish every stream with
+    the right token counts."""
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=32,
+                      decode_chunk=4, snapshot_int8=True)
+    eng.start(_reqs()[:2])
+    eng.step()
+    snaps = eng.drain()
+    assert all(lm.payload_is_quantized(s.payload) for s in snaps if s.warm)
+    eng2 = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=32,
+                       decode_chunk=4)
+    eng2.restore(snaps)
+    while eng2.pending:
+        eng2.step()
+    done = {r.uid: r for r in list(eng.finished) + list(eng2.finished)}
+    for i, (p, n) in enumerate(zip(MIXED_PROMPTS[:2], MIXED_NEW[:2])):
+        assert len(done[i].generated) == n
+
+
+# ===========================================================================
+# partial drains: survivors bit-identical, victims chosen by policy
+# ===========================================================================
+
+@pytest.mark.parametrize("arch", SCHEMA_ARCHS)
+def test_partial_drain_survivors_bit_identical(arch):
+    """The tentpole acceptance criterion: drain ONE slot mid-stream and
+    the surviving slots keep decoding token-for-token what they decode
+    in an unpreempted run — per cache schema.  The drained stream then
+    restores losslessly elsewhere."""
+    cfg, run, ctx, params = _setup(arch)
+
+    def reqs():
+        return [Request(uid=0, prompt=[1, 2, 3], max_new_tokens=10),
+                Request(uid=1, prompt=[4, 5], max_new_tokens=9),
+                Request(uid=2, prompt=[7, 6, 5, 4], max_new_tokens=8)]
+
+    ref = {r.uid: list(r.generated)
+           for r in ServeEngine(cfg, run, ctx, params, batch_size=3,
+                                max_seq=32,
+                                decode_chunk=4).generate(reqs())}
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=3, max_seq=32,
+                      decode_chunk=4)
+    eng.start(reqs())
+    eng.step()
+    eng.set_slot_limit(2)
+    victims = eng.select_victims(1)
+    snaps = eng.drain(slots=victims)
+    assert len(snaps) == 1 and snaps[0].warm
+    assert eng.pending                       # survivors keep going
+    while eng.pending:
+        eng.step()
+    survivors = {r.uid: list(r.generated) for r in eng.finished}
+    drained_uid = snaps[0].request.uid
+    assert drained_uid not in survivors
+    assert survivors == {u: ref[u] for u in survivors}   # bit-identical
+    # the shed lane stayed empty (slot limit) and the drained stream
+    # continues bit-identically on another engine
+    assert len(survivors) == 2
+    eng2 = ServeEngine(cfg, run, ctx, params, batch_size=1, max_seq=32,
+                       decode_chunk=4)
+    eng2.restore(snaps)
+    while eng2.pending:
+        eng2.step()
+    assert [list(r.generated) for r in eng2.finished] == [ref[drained_uid]]
+
+
+def test_victim_policy_fewest_remaining_tokens_first():
+    """select_victims orders by fewest remaining tokens (max_new minus
+    delivered), ties by slot id."""
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=3, max_seq=32,
+                      decode_chunk=2)
+    reqs = [Request(uid=0, prompt=[1, 2], max_new_tokens=9),
+            Request(uid=1, prompt=[3, 4], max_new_tokens=3),
+            Request(uid=2, prompt=[5, 6], max_new_tokens=6)]
+    eng.start(reqs)
+    eng.step()    # every slot delivered the same chunk
+    sched = eng._sched
+    by_sid = {s.sid: s.request.uid for s in sched.active()}
+    victims = eng.select_victims(2)
+    assert [by_sid[v] for v in victims] == [1, 2]   # fewest owed first
+    # a custom policy hook overrides the default
+    eng.victim_policy = lambda slots: sorted(slots, key=lambda s: -s.sid)
+    assert eng.select_victims(1) == [max(by_sid)]
+
+
+def test_slot_limit_caps_admission():
+    """set_slot_limit keeps shed capacity empty: with limit 1, a
+    3-slot engine serves its queue one request at a time."""
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=3, max_seq=32,
+                      decode_chunk=4)
+    eng.set_slot_limit(1)
+    eng.start(_reqs()[:3])
+    eng.step()
+    assert len(eng._sched.active()) <= 1
+    with pytest.raises(ValueError):
+        eng.set_slot_limit(0)
+    with pytest.raises(ValueError):
+        eng.set_slot_limit(4)
+    eng.set_slot_limit(3)
+    while eng.pending:
+        eng.step()
+    ref = {r.uid: list(r.generated)
+           for r in ServeEngine(cfg, run, ctx, params, batch_size=3,
+                                max_seq=32,
+                                decode_chunk=4).generate(_reqs()[:3])}
+    assert {r.uid: list(r.generated) for r in eng.finished} == ref
+
+
+def test_serve_job_partial_shed_and_grow_with_real_engine():
+    """Engine-mode proportional preemption: preempt(max_slots=k) parks
+    the policy's victims (engine keeps serving the survivors), grow()
+    re-admits them, and every stream still finishes exactly."""
+    cfg, run, ctx, params = _setup("llama3.2-3b")
+    from repro.fleet import ServeJob
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=32,
+                      decode_chunk=4)
+    reqs = [Request(uid=i, prompt=[3 * i + 1, 5, 7], max_new_tokens=6)
+            for i in range(3)]
+    job = ServeJob("real", cfg, batch=2, prompt=8, new_tokens=6,
+                   total_requests=3, decode_chunk=4, engine=eng,
+                   requests=reqs, partial=True)
+    job.advance(0.1)
+    assert job.active_cap == 2
+    back = job.preempt(max_slots=1)
+    assert back == 0.0                       # no backoff: job kept its node
+    assert job.active_cap == 1 and job.parked_slots == 1
+    assert eng.slot_limit == 1
+    assert job.last_shed_slots == 1
+    job.advance(0.1)                         # survivors still serving
+    assert job.grow(2) == 1                  # parked lane re-admitted
+    assert job.parked_slots == 0 and eng.slot_limit == 2
+    while not job.done:
+        job.advance(0.1)
+    assert sorted(r.uid for r in eng.finished) == [0, 1, 2]
+    assert all(len(r.generated) == 6 for r in reqs)
+    assert job.emitted == 18                 # nothing double-generated
+
+
+# ===========================================================================
+# fleet: proportional sheds, placement affinity, link-cost model
+# ===========================================================================
+
+def test_squeeze_sheds_slots_instead_of_suspending():
+    """A budget squeeze that strands half a batch's margin sheds exactly
+    the stranded slots (ceil(deficit / margin-per-slot)); the job keeps
+    its node (no supervisor restart), and the parked slots re-admit as
+    the budget staircases back."""
+    from repro.fleet.cluster import USEFUL_MARGIN_W
+    llama = get_model_config("llama3.2-3b")
+    floor = DEFAULT_SUPERCHIP.p_floor
+    min_w = floor + USEFUL_MARGIN_W
+    job = ServeJob("s", llama, batch=32, prompt=256, new_tokens=64,
+                   total_requests=10**9, decode_chunk=8, partial=True)
+    trace = [(0.0, N_PMAX),
+             (4.0, min_w - USEFUL_MARGIN_W / 2),    # strands 16 slots
+             (8.0, min_w - USEFUL_MARGIN_W / 4),    # half return
+             (10.0, N_PMAX)]                        # full batch again
+    c = SimulatedCluster(n_nodes=1, cabinet_size=1, policy="sensitivity")
+    out = c.run(jobs=[job], budget=trace, until_s=14.0)
+    assert out["preemptions"] == 0                  # never suspended
+    assert job.supervisor.history == []
+    assert out["partial_drains"] >= 1
+    assert out["shed_slots"] >= 16
+    assert out["unparked_slots"] == out["shed_slots"]
+    assert job.active_cap == 32 and job.parked_slots == 0
+    assert out["tokens"] > 0
+
+
+def test_squeeze_sheds_minimal_slot_set():
+    """The shed is MINIMAL: a deficit of margin/2 on a 32-slot batch
+    parks ceil(16) slots, not the whole batch."""
+    from repro.fleet.cluster import USEFUL_MARGIN_W
+    llama = get_model_config("llama3.2-3b")
+    min_w = DEFAULT_SUPERCHIP.p_floor + USEFUL_MARGIN_W
+    job = ServeJob("s", llama, batch=32, prompt=256, new_tokens=64,
+                   total_requests=10**9, decode_chunk=8, partial=True)
+    trace = [(0.0, N_PMAX), (4.0, min_w - USEFUL_MARGIN_W / 2)]
+    c = SimulatedCluster(n_nodes=1, cabinet_size=1, policy="sensitivity")
+    out = c.run(jobs=[job], budget=trace, until_s=7.0)
+    assert out["shed_slots"] == 16
+    assert job.active_cap == 16 and job.parked_slots == 16
+    # deep dips still suspend whole: partial cannot give back the floor
+    job2 = ServeJob("s2", llama, batch=32, prompt=256, new_tokens=64,
+                    total_requests=10**9, decode_chunk=8, partial=True)
+    c2 = SimulatedCluster(n_nodes=1, cabinet_size=1, policy="sensitivity")
+    out2 = c2.run(jobs=[job2], budget=[(0.0, N_PMAX), (4.0, 10.0)],
+                  until_s=7.0)
+    assert out2["preemptions"] == 1
+    assert job2.active_cap == 32            # parked lanes rejoined the drain
+
+
+def test_link_bandwidth_and_transfer_seconds():
+    """Per-link cost model: full ICI within a cabinet, the (slower)
+    cross-cabinet rate between cabinets, zero cost to oneself."""
+    c = SimulatedCluster(n_nodes=4, cabinet_size=2)
+    n00, n01, n02 = c.nodes[0].name, c.nodes[1].name, c.nodes[2].name
+    assert c.link_bw(n00, n01) == c.interconnect_bw
+    assert c.link_bw(n00, n02) == c.cross_cabinet_bw
+    assert c.cross_cabinet_bw < c.interconnect_bw
+    nbytes = 1e9
+    assert c.transfer_seconds(n00, n00, nbytes) == 0.0
+    assert c.transfer_seconds(n00, n01, nbytes) == \
+        pytest.approx(nbytes / c.interconnect_bw)
+    assert c.transfer_seconds(n00, n02, nbytes) == \
+        pytest.approx(nbytes / c.cross_cabinet_bw)
+    # legacy call shape still prices at the intra-cabinet rate
+    assert c.migration_seconds(nbytes) == \
+        pytest.approx(nbytes / c.interconnect_bw)
+
+
+def test_placement_affinity_prefers_origin_then_cheapest_link():
+    """A resuming snapshot carrier takes its origin node when free;
+    when the origin is busy it takes the free node behind the cheapest
+    link from the origin (same cabinet before cross-cabinet)."""
+    from repro.fleet.scheduler import FleetScheduler
+    c = SimulatedCluster(n_nodes=4, cabinet_size=2)
+    free = list(c.nodes)
+    n00, n01, n02, n03 = [n.name for n in c.nodes]
+    assert FleetScheduler._place(c, free, n02, 10**6).name == n02
+    # origin busy: same-cabinet n03 beats the cross-cabinet nodes
+    free_no_origin = [n for n in c.nodes if n.name != n02]
+    assert FleetScheduler._place(c, free_no_origin, n02, 10**6).name == n03
+    # no snapshot: first free node, as before
+    assert FleetScheduler._place(c, free_no_origin, n02, 0).name == n00
+
+
+@pytest.mark.slow
+def test_trains_restart_first_then_serves_migrate_affine():
+    """The benchmark's migration-forcing pattern: after a deep dip the
+    quick-restart trains grab the lowest-numbered nodes, so the
+    snapshot-carrying serves land elsewhere — and the transfer is
+    charged at the LINK rate of the chosen edge."""
+    llama = get_model_config("llama3.2-3b")
+    jobs = [
+        ServeJob("serve-0", llama, batch=32, prompt=1024, new_tokens=256,
+                 total_requests=10**9, decode_chunk=32, value=4.0,
+                 backoff_s=2.5, max_restarts=64),
+        TrainJob("train-1", llama, batch=8, seq=512, total_steps=10**9,
+                 backoff_s=0.05, max_restarts=64),
+        ServeJob("serve-2", llama, batch=32, prompt=1024, new_tokens=256,
+                 total_requests=10**9, decode_chunk=32, value=4.0,
+                 backoff_s=2.5, max_restarts=64),
+        TrainJob("train-3", llama, batch=8, seq=512, total_steps=10**9,
+                 backoff_s=0.05, max_restarts=64),
+    ]
+    p = 4 * N_PMAX
+    trace = [(0.0, 0.75 * p), (4.0, 10.0), (6.0, 0.75 * p)]
+    c = SimulatedCluster(n_nodes=4, cabinet_size=2, policy="sensitivity")
+    out = c.run(jobs=jobs, budget=trace, until_s=12.0)
+    assert out["migrations"] >= 1
+    assert out["migration_s"] > 0
+    assert out["dropped_tokens"] > 0        # trains still roll back
+    serve_drop = sum(j.last_preempt_dropped for j in jobs
+                     if j.kind == "serve")
+    assert serve_drop == 0                  # serve state survived

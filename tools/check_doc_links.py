@@ -1,0 +1,79 @@
+"""Relative-link checker for the repo's markdown documentation.
+
+Scans every given markdown file (or every ``*.md`` in a given
+directory) for inline links/images ``[text](target)`` and fails when a
+RELATIVE target — optionally carrying a ``#anchor`` — does not resolve
+to an existing file or directory next to the document.  External
+schemes (http/https/mailto) and pure in-page anchors are skipped;
+anchors into other markdown files are checked against that file's
+headings (GitHub-style slugs).
+
+  python tools/check_doc_links.py README.md docs
+
+Exit status 0 = every link resolves; 1 = broken links (listed).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_SKIP = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation (markdown
+    backticks included), spaces to dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(md: Path) -> set[str]:
+    return {_slug(h) for h in _HEADING.findall(md.read_text())}
+
+
+def check_file(md: Path) -> list[str]:
+    problems = []
+    for target in _LINK.findall(md.read_text()):
+        if target.startswith(_SKIP):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if not path_part:          # in-page anchor
+            if anchor and _slug(anchor) not in _anchors(md):
+                problems.append(f"{md}: broken in-page anchor #{anchor}")
+            continue
+        dest = (md.parent / path_part).resolve()
+        if not dest.exists():
+            problems.append(f"{md}: broken link {target}")
+            continue
+        if anchor and dest.suffix == ".md" \
+                and _slug(anchor) not in _anchors(dest):
+            problems.append(f"{md}: missing anchor {target}")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    files: list[Path] = []
+    for arg in argv or ["README.md", "docs"]:
+        p = Path(arg)
+        if p.is_dir():
+            files.extend(sorted(p.glob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"no such file: {arg}", file=sys.stderr)
+            return 1
+    problems = [msg for f in files for msg in check_file(f)]
+    for msg in problems:
+        print(msg, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not problems else f'{len(problems)} broken links'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
