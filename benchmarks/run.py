@@ -9,7 +9,8 @@ import traceback
 from benchmarks import (cell_caps, fig1_power_trace, fig2_sed_sweep,
                         fig3_ed_sweep, fleet_power, migration, roofline,
                         serving_throughput, steering_policy,
-                        table1_task_profile, table2_optimal_caps)
+                        table1_task_profile, table2_optimal_caps,
+                        traffic_slo)
 
 BENCHES = [
     ("table1", table1_task_profile),
@@ -23,6 +24,7 @@ BENCHES = [
     ("serve", serving_throughput),
     ("fleet", fleet_power),
     ("migrate", migration),
+    ("traffic", traffic_slo),
 ]
 
 

@@ -20,7 +20,16 @@ simulated multi-node, multi-job cluster —
                  resumes on (cross-node transfers charged on the clock)
   telemetry.py   FleetTelemetry: per-node samples -> fleet counters
                  (tokens, joules, grants, violations, migrated vs dropped
-                 tokens) for the re-decide loop and BENCH_fleet.json
+                 tokens, SLO / queue / power-gating counters) for the
+                 re-decide loop and BENCH_fleet.json
+
+One layer further up, ``repro.workload`` drives this cluster open-loop:
+``SimulatedCluster.run(..., workload=driver)`` feeds a seed-driven
+arrival trace into ``ServeJob(open_loop=True)`` services and an
+SLO-aware autoscaler parks idle jobs (``ServeJob.hibernate``), sleeps
+their nodes (``FleetNode.sleep``/``wake``, ``idle_w`` hotel load) and
+wakes them back under queue pressure; parked in-flight streams can be
+adopted by another same-config serve job (scheduler tick step 2c).
 
 Quick start::
 

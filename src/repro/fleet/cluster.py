@@ -96,6 +96,10 @@ class FleetNode:
         self.local_t = 0.0
         self.assigned_at = 0.0
         self._tasks: dict[str, object] = {}
+        # -- power-gating state (workload autoscaling) ---------------------
+        self.asleep = False      # deep power-gate: draws nothing, not
+                                 # assignable until woken
+        self.wake_at = 0.0       # virtual time the last wake completes
 
     # -- capacity constants -------------------------------------------------
     @property
@@ -110,10 +114,34 @@ class FleetNode:
     def busy(self) -> bool:
         return self.job is not None
 
+    # -- sleep / wake (workload autoscaling power-gates idle nodes) ---------
+    def sleep(self) -> None:
+        """Deep power-gate: the node draws NOTHING (not even idle
+        watts) and is unassignable until ``wake`` completes.  Only an
+        idle node may sleep — parking a job first is the scheduler's
+        business."""
+        if self.busy:
+            raise RuntimeError(f"{self.name} is busy, cannot sleep")
+        self.asleep = True
+
+    def wake(self, now: float, latency_s: float) -> None:
+        """Begin powering the node back up; it becomes assignable (and
+        starts drawing idle watts) once ``latency_s`` virtual seconds
+        elapse — the cold-start cost eager autoscaling pays."""
+        self.asleep = False
+        self.wake_at = max(self.wake_at, now + latency_s)
+
+    def assignable(self, now: float) -> bool:
+        """Free, awake and fully powered — the only nodes the scheduler
+        may place work on."""
+        return not self.busy and not self.asleep and self.wake_at <= now
+
     # -- job lifecycle ------------------------------------------------------
     def assign(self, job: Job, t: float) -> None:
         if self.job is not None:
             raise RuntimeError(f"{self.name} already runs {self.job.name}")
+        if self.asleep:
+            raise RuntimeError(f"{self.name} is asleep, wake it first")
         self.job = job
         tasks = job.phase_tasks()
         self._tasks = {task.name: task for task in tasks}
@@ -185,9 +213,9 @@ class FleetNode:
 
     @property
     def job_value(self) -> float:
-        """Worth of one of this node's tokens in the fleet objective."""
-        return float(getattr(self.job, "value", 1.0)) \
-            if self.job is not None else 0.0
+        """Worth of one of this node's tokens in the fleet objective
+        (``value`` is a formal Job-protocol field)."""
+        return float(self.job.value) if self.job is not None else 0.0
 
     def weighted_throughput_at(self, grant_w: float) -> float:
         """Value-weighted modeled tokens/s — the unit the controller's
@@ -265,6 +293,16 @@ class SimulatedCluster:
     ``cabinet_ceil_w`` (scalar, or ``{cabinet: watts}``) gives cabinets
     real busbar/cooling ceilings enforced as a middle ``weighted_split``
     level in the controller — not just roll-up accounting.
+
+    ``idle_w`` charges every AWAKE idle node that many watts per second
+    (hosts idle hot even with the accelerator power-gated) — drawn out
+    of the facility budget before the controller splits the remainder,
+    and accrued into ``telemetry.idle_energy_j``.  The default 0.0
+    preserves the legacy free-idle accounting every earlier benchmark
+    was gated on.  A SLEEPING node (``sleep_node``, driven by the
+    workload autoscaler) draws nothing but pays ``wake_latency_s`` of
+    virtual unassignability to come back — the trade the autoscaler
+    arbitrates.
     """
 
     def __init__(self, n_nodes: int, cabinet_size: int = 4,
@@ -273,13 +311,16 @@ class SimulatedCluster:
                  quantum_s: float = 1.0,
                  useful_margin_w: float = USEFUL_MARGIN_W,
                  cabinet_ceil_w=None, interconnect_bw: float | None = None,
-                 cross_cabinet_bw: float | None = None):
+                 cross_cabinet_bw: float | None = None,
+                 idle_w: float = 0.0, wake_latency_s: float = 2.0):
         if n_nodes < 1:
             raise ValueError("need at least one node")
         self.spec = spec
         self.quantum_s = quantum_s
         self.useful_margin_w = useful_margin_w
         self.cabinet_ceil_w = cabinet_ceil_w
+        self.idle_w = idle_w
+        self.wake_latency_s = wake_latency_s
         # snapshot-migration bandwidth: the chip's ICI link rate for
         # same-cabinet links unless the deployment says otherwise;
         # cross-cabinet hops leave the ICI domain (DCN-class) and default
@@ -303,10 +344,36 @@ class SimulatedCluster:
 
     # -- node views (deterministic order) -----------------------------------
     def free_nodes(self) -> list[FleetNode]:
-        return [n for n in self.nodes if not n.busy]
+        """Nodes the scheduler may place work on: idle, awake, and past
+        any in-flight wake latency."""
+        return [n for n in self.nodes if n.assignable(self.clock.now)]
 
     def busy_nodes(self) -> list[FleetNode]:
         return [n for n in self.nodes if n.busy]
+
+    def idle_nodes(self) -> list[FleetNode]:
+        """Idle but AWAKE nodes (including ones mid-wake): the set that
+        draws ``idle_w`` each."""
+        return [n for n in self.nodes if not n.busy and not n.asleep]
+
+    def sleeping_nodes(self) -> list[FleetNode]:
+        return [n for n in self.nodes if n.asleep]
+
+    def idle_draw_w(self) -> float:
+        """Facility watts the awake-idle set burns doing nothing — what
+        power-gating (``sleep_node``) returns to the budget pool."""
+        return self.idle_w * len(self.idle_nodes())
+
+    # -- power gating (the workload autoscaler drives these) ----------------
+    def sleep_node(self, node: FleetNode) -> None:
+        node.sleep()
+        self.telemetry.record_sleep()
+
+    def wake_node(self, node: FleetNode) -> None:
+        if not node.asleep:
+            return
+        node.wake(self.clock.now, self.wake_latency_s)
+        self.telemetry.record_wake()
 
     # -- migration cost model ------------------------------------------------
     def link_bw(self, src: str, dst: str) -> float:
@@ -344,7 +411,14 @@ class SimulatedCluster:
         return {c: float(self.cabinet_ceil_w) for c in cabs}
 
     # -- the control loop ---------------------------------------------------
-    def run(self, jobs: Iterable[Job], budget, until_s: float) -> dict:
+    def run(self, jobs: Iterable[Job], budget, until_s: float,
+            workload=None) -> dict:
+        """``workload`` optionally carries a
+        ``repro.workload.WorkloadDriver``: called once per quantum
+        (before the scheduling tick) to deliver due arrivals, dispatch
+        them across the open-loop serve jobs and run the autoscaler —
+        which may park jobs / sleep nodes through this cluster's
+        power-gating surface."""
         trace = BudgetTrace.of(budget)
         sched = FleetScheduler(
             list(jobs),
@@ -361,8 +435,15 @@ class SimulatedCluster:
                     self.telemetry.record_completion()
                     sched.complete(node.release())
 
-            # 2. reconcile placement against the current envelope
-            events = sched.tick(now, self, budget_w)
+            # 1b. the workload delivers arrivals / autoscales
+            if workload is not None:
+                workload.on_quantum(self, sched, now)
+
+            # 2. reconcile placement against the current envelope; the
+            #    awake-idle set's hotel load comes off the top first —
+            #    power-gating idle nodes is what returns these watts
+            events = sched.tick(now, self,
+                                max(budget_w - self.idle_draw_w(), 0.0))
             for _ in events["preempted"]:
                 self.telemetry.record_preemption()
             if events["dropped_tokens"]:
@@ -375,15 +456,19 @@ class SimulatedCluster:
                 self.telemetry.record_partial(p["slots"], p["tokens"])
             for u in events.get("unparked", ()):
                 self.telemetry.record_unpark(u["slots"])
+            for a in events.get("adoptions", ()):
+                self.telemetry.record_adoption(a["slots"], a["tokens"],
+                                               a["bytes"], a["seconds"])
 
             busy = self.busy_nodes()
-            if not busy and not sched.has_work:
+            if (not busy and not sched.has_work
+                    and (workload is None or workload.exhausted)):
                 break
 
             # 3. re-decide grants (hierarchical, conservation asserted)
             if busy:
                 alloc = self.controller.redistribute(
-                    budget_w, busy, t=now,
+                    max(budget_w - self.idle_draw_w(), 0.0), busy, t=now,
                     cabinet_ceils=self.cabinet_ceils(busy))
                 self.allocations.append(alloc)
                 self.telemetry.record_grants(alloc.node_w)
@@ -392,11 +477,17 @@ class SimulatedCluster:
             for node in self.free_nodes():
                 node.set_grant(0.0)    # power-gated
 
-            # 4. everyone executes on the shared clock
+            # 4. everyone executes on the shared clock; the awake-idle
+            #    set accrues its hotel load for the quantum
             for node in busy:
                 sample = node.run_quantum(now + self.quantum_s)
                 if sample is not None:
                     self.telemetry.record(sample)
+            if self.idle_w > 0:
+                n_idle = len(self.idle_nodes())
+                if n_idle:
+                    self.telemetry.record_idle(
+                        self.idle_w * n_idle * self.quantum_s)
             self.clock.advance(self.quantum_s)
         # harvest jobs that finished during the final quantum — the loop
         # exit must not leave their completion unrecorded / node busy

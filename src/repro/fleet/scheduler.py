@@ -35,6 +35,7 @@ from typing import Protocol, runtime_checkable
 
 from repro.core.tasks import Task
 from repro.runtime.supervisor import StepwiseSupervisor
+from repro.serving.scheduler import Request
 
 
 @runtime_checkable
@@ -153,10 +154,14 @@ class TrainJob:
 class _SimSlot:
     """One modeled in-flight stream (engineless ``ServeJob``): tokens
     generated toward its current request and when that request started
-    on the virtual clock (None = not yet / between requests)."""
+    on the virtual clock (None = not yet / between requests).  In
+    open-loop mode ``req`` carries the ``ArrivalEvent`` being served
+    (None = idle lane) so completions know their arrival time, SLO
+    class and per-request output length."""
 
     progress: int = 0
     started: float | None = None
+    req: object = None      # Optional[repro.workload.ArrivalEvent]
 
 
 @dataclasses.dataclass
@@ -200,7 +205,19 @@ class ServeJob:
     per step, completing (and restarting) independently against the
     virtual clock — completions feed ``request_latencies``, the p50/p99
     the migration benchmark reports; per-slot snapshot bytes come from
-    the analytic KV-cache model at each stream's current depth."""
+    the analytic KV-cache model at each stream's current depth.
+
+    ``open_loop=True`` switches the job from a fixed workload to a
+    STANDING SERVICE: it serves whatever ``offer()`` feeds it (the
+    ``repro.workload`` arrival trace), idle lanes burn their step energy
+    while emitting nothing (the waste autoscaling reclaims), ``done`` is
+    never True, and each completion's latency counts from the request's
+    ARRIVAL time — queue wait included — into ``request_latencies`` and
+    the attached ``slo`` tracker.  ``slot_target`` (set by the
+    autoscaler) caps how far the scheduler regrows a shrunken job;
+    ``hibernate()`` is the voluntary park — the same lossless drain as
+    ``preempt()`` but with no restart-budget charge and no backoff,
+    because the job did nothing wrong."""
 
     name: str
     cfg: object                    # repro.configs.base.ModelConfig
@@ -218,6 +235,8 @@ class ServeJob:
     migrate: bool = True
     partial: bool = False
     snapshot_int8: bool = False
+    open_loop: bool = False
+    slo: object = None             # Optional[repro.workload.SLOTracker]
     kind: str = dataclasses.field(default="serve", init=False)
     emitted: int = dataclasses.field(default=0, init=False)
 
@@ -241,6 +260,10 @@ class ServeJob:
         self.last_shed_slots = 0
         self.last_shed_tokens = 0
         self.last_shed_bytes = 0
+        # -- open-loop (offered-traffic) state ------------------------------
+        self.slot_target: int | None = None   # autoscaler's regrow ceiling
+        self._pending = deque()               # modeled: offered, not placed
+        self._arrivals: dict = {}             # engine: uid -> ArrivalEvent
         if self.engine is not None and self.snapshot_int8:
             self.engine.snapshot_int8 = True
 
@@ -250,6 +273,8 @@ class ServeJob:
 
     @property
     def done(self) -> bool:
+        if self.open_loop:
+            return False      # a standing service is never "done"
         if self.engine is not None:
             return (self._started and not self.engine.pending
                     and not self._parked)
@@ -277,6 +302,150 @@ class ServeJob:
         of suspending it whole (requires the lossless drain path)."""
         return self.partial and self.migrate
 
+    # -- open-loop feed (repro.workload drives these) -----------------------
+    @property
+    def queue_depth(self) -> int:
+        """Offered requests waiting for a lane (not yet decoding)."""
+        if self.engine is not None:
+            if self._started:
+                return self.engine.queue_depth
+            return sum(1 for r in (self.requests or [])
+                       if not r.done and not r.generated)
+        return len(self._pending)
+
+    @property
+    def active_streams(self) -> int:
+        """Requests currently occupying a decode lane."""
+        if self.engine is not None:
+            return self.engine.active_slots if self._started else 0
+        return sum(1 for s in self._slots if s.req is not None)
+
+    def _synth_prompt(self, ev) -> list[int]:
+        """Deterministic stand-in prompt tokens for an offered arrival
+        (the trace carries lengths, not text)."""
+        return [(17 * ev.uid + 3 * j) % 251 + 2
+                for j in range(max(ev.prompt_len, 1))]
+
+    def offer(self, arrivals, now: float | None = None) -> None:
+        """Feed offered traffic into a standing (open-loop) service.
+        Modeled mode queues the events for the per-slot accounting;
+        engine mode synthesizes real ``Request``s and submits them to
+        the live stream (or the snapshot set, if the job is currently
+        suspended mid-migration)."""
+        if not self.open_loop:
+            raise RuntimeError(f"{self.name} is not an open-loop job")
+        if self.engine is None:
+            self._pending.extend(arrivals)
+            return
+        from repro.serving.engine import SlotSnapshot
+        self.requests = self.requests if self.requests is not None else []
+        for ev in arrivals:
+            req = Request(uid=ev.uid, prompt=self._synth_prompt(ev),
+                          max_new_tokens=ev.output_len)
+            self._arrivals[ev.uid] = ev
+            self.requests.append(req)
+            if self._started:
+                self.engine.submit([req])
+            elif self._snapshots is not None:
+                self._snapshots.append(
+                    SlotSnapshot(request=req, rem=req.max_new_tokens))
+
+    def _record_completion(self, ev, now: float | None) -> None:
+        if now is None or ev is None:
+            return
+        latency = now - ev.t
+        self.request_latencies.append(latency)
+        if self.slo is not None:
+            self.slo.complete(ev.slo, latency, ev.output_len,
+                              ev.deadline_s)
+
+    # -- cross-job stream adoption ------------------------------------------
+    @property
+    def parked_streams(self) -> int:
+        """Parked entries carrying live in-flight work another serve
+        job could adopt (warm snapshots / occupied modeled lanes)."""
+        if self.engine is not None:
+            return sum(1 for s in self._parked if getattr(s, "warm", False))
+        if self.open_loop:
+            return sum(1 for s in self._parked if s.req is not None)
+        return 0
+
+    @property
+    def free_stream_room(self) -> int:
+        """Slots this job could hand to an adopted stream right now
+        (free lanes beyond what its own queue is about to fill)."""
+        if self.engine is not None:
+            if not self._started:
+                return 0
+            return max(0, self.engine.slot_limit - self.engine.active_slots
+                       - self.engine.queue_depth)
+        if self.open_loop:
+            idle = sum(1 for s in self._slots if s.req is None)
+            return max(0, idle - len(self._pending))
+        return 0
+
+    def can_adopt_from(self, donor) -> bool:
+        """Whether ``donor``'s parked streams may install here: same
+        model config, same execution mode, and this job has a live
+        stream to install into."""
+        if donor is self or getattr(donor, "kind", None) != "serve":
+            return False
+        if (self.engine is None) != (donor.engine is None):
+            return False
+        if self.cfg != donor.cfg:
+            return False
+        if self.engine is not None:
+            return self._started
+        return self.open_loop and donor.open_loop
+
+    def donate_to(self, other, max_streams: int | None = None):
+        """Move up to ``max_streams`` parked in-flight streams into
+        ``other``'s free slots (cross-job adoption): the stream resumes
+        under the receiver instead of waiting for its origin job's
+        regrow.  Donor lanes STAY parked (empty) — the donor's capacity
+        shrinkage was the scheduler's decision and is not undone here.
+        Returns ``(streams, tokens, bytes)`` moved."""
+        room = other.free_stream_room
+        n = room if max_streams is None else min(room, max_streams)
+        moved = tokens = nbytes = 0
+        if n <= 0:
+            return moved, tokens, nbytes
+        if self.engine is not None:
+            for snap in [s for s in self._parked
+                         if getattr(s, "warm", False)]:
+                if moved >= n:
+                    break
+                if snap.kv_len + snap.rem > other.engine.max_seq:
+                    continue
+                self._parked.remove(snap)
+                if snap.request in (self.requests or []):
+                    self.requests.remove(snap.request)
+                    self._delivered_seen -= len(snap.request.generated)
+                other.requests = (other.requests
+                                  if other.requests is not None else [])
+                other.requests.append(snap.request)
+                other.engine.restore([snap])
+                other._delivered_seen += len(snap.request.generated)
+                ev = self._arrivals.pop(snap.request.uid, None)
+                if ev is not None:
+                    other._arrivals[snap.request.uid] = ev
+                moved += 1
+                tokens += len(snap.request.generated)
+                nbytes += snap.payload_bytes
+        else:
+            for s in [p for p in self._parked if p.req is not None]:
+                if moved >= n:
+                    break
+                # the lane stays parked, just emptied of its stream
+                self._parked[self._parked.index(s)] = _SimSlot()
+                lane = next(l for l in other._slots if l.req is None)
+                lane.req, lane.progress = s.req, s.progress
+                lane.started = s.started
+                moved += 1
+                tokens += s.progress
+                nbytes += self._slot_bytes(s.progress, s.req.prompt_len)
+        return moved, tokens, nbytes
+
     def phase_tasks(self) -> list[Task]:
         if self._tasks is None or self._tasks_key != self._active_cap:
             from repro.serving.engine import serve_phase_tasks
@@ -296,21 +465,32 @@ class ServeJob:
         return self._active_cap * self.decode_chunk
 
     # -- modeled per-slot accounting (engine=None mode) ---------------------
+    def _sim_remaining(self, s: _SimSlot) -> int:
+        """Tokens a modeled lane still owes its current request (0 for
+        an idle open-loop lane)."""
+        if self.open_loop:
+            return s.req.output_len - s.progress if s.req is not None else 0
+        return self.new_tokens - s.progress
+
     def _in_flight_modeled(self) -> int:
         """Tokens generated for requests not yet complete — the state a
         drop destroys and a migration (or a parked slot) preserves."""
         return sum(s.progress for s in self._slots) \
             + sum(s.progress for s in self._parked)
 
-    def _slot_bytes(self, progress: int) -> int:
+    def _slot_bytes(self, progress: int,
+                    prompt_len: int | None = None) -> int:
         """Analytic on-wire size of ONE stream's cache lane at its
         current depth (the engineless analogue of
         ``SlotSnapshot.payload_bytes``), int8-scaled when the job
-        compresses snapshots."""
+        compresses snapshots.  Open-loop streams pass their own
+        per-request prompt length; fixed workloads use the job-wide
+        ``prompt``."""
         if progress <= 0:
             return 0
+        plen = self.prompt if prompt_len is None else prompt_len
         from repro.hw import flops as F
-        raw = F._cache_bytes(self.cfg, 1, self.prompt + progress)
+        raw = F._cache_bytes(self.cfg, 1, plen + progress)
         if self.snapshot_int8:
             from repro.models.lm import int8_payload_ratio
             raw *= int8_payload_ratio(self.cfg)
@@ -342,10 +522,39 @@ class ServeJob:
                 # way only tokens delivered from here on count as fresh
                 self._delivered_seen = sum(
                     len(r.generated) for r in (self.requests or []))
-            self.engine.step()
+            newly = self.engine.step()
             delivered = sum(len(r.generated) for r in (self.requests or []))
             fresh = delivered - self._delivered_seen
             self._delivered_seen = delivered
+            self.emitted += fresh
+            if self.open_loop:
+                for r in newly:
+                    self._record_completion(
+                        self._arrivals.pop(r.uid, None), now)
+            return fresh
+        if self.open_loop:
+            # modeled open-loop: idle lanes pull from the offered queue,
+            # each stream owes its OWN output length, completions clock
+            # latency from the request's arrival (queue wait included).
+            # Lanes left idle emit nothing — but the step still burns
+            # the full profile's energy in run_quantum, which is the
+            # waste autoscaling exists to reclaim.
+            fresh = 0
+            for s in self._slots:
+                if s.req is None:
+                    if not self._pending:
+                        continue
+                    s.req = self._pending.popleft()
+                    s.progress = 0
+                    s.started = now - step_s if now is not None else None
+                take = min(self.decode_chunk, s.req.output_len - s.progress)
+                s.progress += take
+                fresh += take
+                if s.progress >= s.req.output_len:
+                    self._record_completion(s.req, now)
+                    s.req = None
+                    s.progress = 0
+                    s.started = None
             self.emitted += fresh
             return fresh
         # modeled: every active stream gains up to decode_chunk tokens,
@@ -380,6 +589,22 @@ class ServeJob:
         ``last_shed_slots/tokens/bytes``."""
         if max_slots is not None:
             return self._shed_to(max_slots)
+        self._suspend()
+        self.dropped_total += self.last_preempt_dropped
+        return self.supervisor.preempted()
+
+    def hibernate(self) -> float:
+        """Voluntary park (the autoscaler's idle consolidation): the
+        same lossless whole-job drain as ``preempt()``, but with NO
+        restart-budget charge and NO backoff — the job did nothing
+        wrong, the fleet just has no traffic for it.  Returns 0.0."""
+        self._suspend()
+        self.dropped_total += self.last_preempt_dropped
+        self.slot_target = None      # a resumed job renegotiates size
+        return 0.0
+
+    def _suspend(self) -> None:
+        """Whole-job drain shared by ``preempt`` and ``hibernate``."""
         self.last_preempt_dropped = 0
         self.snapshot_tokens = self.snapshot_bytes = 0
         if self.engine is not None:
@@ -426,7 +651,10 @@ class ServeJob:
                 self._active_cap = self.batch
                 self.snapshot_tokens = in_flight
                 self.snapshot_bytes = sum(
-                    self._slot_bytes(s.progress) for s in self._slots)
+                    self._slot_bytes(
+                        s.progress,
+                        s.req.prompt_len if s.req is not None else None)
+                    for s in self._slots)
             else:
                 self.last_preempt_dropped = in_flight
                 self.emitted -= in_flight
@@ -435,8 +663,6 @@ class ServeJob:
                     # the stream restarts from scratch on resume; its
                     # request's latency keeps counting from the original
                     # start (``started`` survives the drop)
-        self.dropped_total += self.last_preempt_dropped
-        return self.supervisor.preempted()
 
     def _shed_to(self, max_slots: int) -> float:
         """Proportional shed: park slots until at most ``max_slots`` stay
@@ -460,9 +686,12 @@ class ServeJob:
                 len(s.request.generated) for s in snaps)
             self.last_shed_bytes = sum(s.payload_bytes for s in snaps)
         else:
-            # fewest remaining tokens first == most progress first
+            # fewest remaining tokens first (== most progress first for
+            # the fixed workload; for open-loop lanes, idle lanes shed
+            # first — they strand nothing — then nearly-done streams)
             order = sorted(range(len(self._slots)),
-                           key=lambda i: (-self._slots[i].progress, i))
+                           key=lambda i: (self._sim_remaining(
+                               self._slots[i]), i))
             chosen = set(order[:n_shed])
             shed = [s for i, s in enumerate(self._slots) if i in chosen]
             self._slots = [s for i, s in enumerate(self._slots)
@@ -471,7 +700,10 @@ class ServeJob:
             self.last_shed_slots = len(shed)
             self.last_shed_tokens = sum(s.progress for s in shed)
             self.last_shed_bytes = sum(
-                self._slot_bytes(s.progress) for s in shed)
+                self._slot_bytes(
+                    s.progress,
+                    s.req.prompt_len if s.req is not None else None)
+                for s in shed)
         self._active_cap = k
         return 0.0
 
@@ -553,6 +785,29 @@ class FleetScheduler:
         job.supervisor.completed("done")
         self.completed.append(job)
 
+    def park(self, node, t: float, rest_s: float = 0.0) -> Job:
+        """Voluntarily hibernate ``node``'s job (the autoscaler's idle
+        consolidation): a lossless drain with no restart-budget charge,
+        releasing the node so the cluster can power-gate it.  The job
+        joins the paused set and resumes through the ordinary
+        origin-affine path once eligible (``t + rest_s`` — the rest
+        keeps an idle job from bouncing straight back onto a free
+        node) and traffic warrants."""
+        job = node.release()
+        job.hibernate()
+        self.paused.append(_Paused(job, eligible_at=t + rest_s,
+                                   origin=node.name))
+        return job
+
+    def expedite(self, t: float) -> None:
+        """Make every paused job eligible to resume at ``t`` — the
+        autoscaler's scale-up override of hibernation rest (a restart
+        backoff that has not yet elapsed is also waived: queue pressure
+        outranks politeness)."""
+        for p in self.paused:
+            if p.eligible_at > t:
+                p.eligible_at = t
+
     @staticmethod
     def _place(cluster, free, origin: str, snap_bytes: int):
         """Placement affinity: a snapshot carrier prefers its ORIGIN node
@@ -591,7 +846,7 @@ class FleetScheduler:
         need = self._busy_need(cluster)
         while busy and need > budget_w + 1e-9:
             victims = sorted(
-                busy, key=lambda n: (getattr(n.job, "value", 1.0),
+                busy, key=lambda n: (n.job.value,
                                      n.job.kind != "train", -n.assigned_at,
                                      n.name))
             node = victims[0]
@@ -636,7 +891,9 @@ class FleetScheduler:
         #    node when free (no transfer), else on the free node behind
         #    the cheapest link — and only a cross-node landing pays the
         #    migration transfer on that node's clock.
-        self.paused.sort(key=lambda p: (-getattr(p.job, "value", 1.0),
+        # ``value`` is a formal Job-protocol field (TrainJob/ServeJob
+        # both carry it), so the ordering reads it directly
+        self.paused.sort(key=lambda p: (-p.job.value,
                                         p.eligible_at, p.job.name))
         for p in list(self.paused):
             if p.eligible_at > t:
@@ -679,10 +936,15 @@ class FleetScheduler:
                     continue
                 cap = max(getattr(job, "capacity", 1), 1)
                 k = getattr(job, "active_cap", cap)
-                if k >= cap:
+                # the autoscaler's slot_target caps the regrow: a job
+                # the workload shrank on purpose must not bounce back
+                # to full capacity just because watts are available
+                goal = getattr(job, "slot_target", None)
+                goal = cap if goal is None else max(1, min(goal, cap))
+                if k >= goal:
                     continue
                 per_slot = self.margin_w / cap
-                k_more = min(cap - k,
+                k_more = min(goal - k,
                              int((budget_w - need) / per_slot + 1e-9))
                 if k_more <= 0:
                     continue
@@ -694,6 +956,41 @@ class FleetScheduler:
                 # counts); the cap may grow further than the parked list
                 unparked.append({"job": job.name, "node": node.name,
                                  "slots": restored, "cap": k + k_more})
+
+        # 2c. cross-job stream adoption: a parked in-flight stream need
+        #     not wait for its origin job's regrow — any OTHER serve job
+        #     fronting the same model config with free slot room takes
+        #     it over (cheapest interconnect link first), paying the
+        #     snapshot transfer on the receiving node's clock.  No watt
+        #     accounting changes: both jobs keep their negotiated caps.
+        adoptions = []
+        cost = getattr(cluster, "transfer_seconds", None)
+        busy_sorted = sorted(cluster.busy_nodes(), key=lambda n: n.name)
+        for dn in busy_sorted:
+            donor = dn.job
+            if getattr(donor, "parked_streams", 0) <= 0:
+                continue
+            receivers = sorted(
+                (rn for rn in busy_sorted
+                 if rn is not dn
+                 and getattr(rn.job, "can_adopt_from", None) is not None
+                 and rn.job.can_adopt_from(donor)
+                 and rn.job.free_stream_room > 0),
+                key=lambda rn: ((cost(dn.name, rn.name, 1)
+                                 if cost is not None else 0.0), rn.name))
+            for rn in receivers:
+                moved, tokens, nbytes = donor.donate_to(rn.job)
+                if moved:
+                    secs = (cost(dn.name, rn.name, nbytes)
+                            if cost is not None else 0.0)
+                    rn.local_t += secs    # the transfer occupies the
+                    adoptions.append({    # receiving node
+                        "job": donor.name, "to": rn.job.name,
+                        "from_node": dn.name, "to_node": rn.name,
+                        "slots": moved, "tokens": tokens,
+                        "bytes": nbytes, "seconds": secs})
+                if getattr(donor, "parked_streams", 0) <= 0:
+                    break
 
         # 3. admit fresh jobs FCFS while nodes and watts allow
         while self.queue:
@@ -707,5 +1004,6 @@ class FleetScheduler:
 
         return {"admitted": admitted, "preempted": preempted,
                 "migrations": migrations, "partials": partials,
-                "unparked": unparked, "dropped_tokens": dropped_tokens,
+                "unparked": unparked, "adoptions": adoptions,
+                "dropped_tokens": dropped_tokens,
                 "kept_tokens": kept_tokens}

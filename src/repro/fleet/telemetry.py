@@ -61,6 +61,21 @@ class FleetTelemetry:
         self.shed_slots = 0          # slots parked across all sheds
         self.parked_tokens = 0       # in-flight tokens parked at shed time
         self.unparked_slots = 0      # slots re-admitted as budget recovered
+        # -- cross-job adoption: parked streams resumed under ANOTHER job --
+        self.adoptions = 0           # adoption events
+        self.adopted_slots = 0       # streams moved between jobs
+        self.adopted_tokens = 0      # in-flight tokens those streams held
+        self.adoption_bytes = 0      # snapshot payload moved for adoptions
+        self.adoption_s = 0.0        # virtual transfer seconds charged
+        # -- workload / power-gating (repro.workload drives these) ---------
+        self.idle_energy_j = 0.0     # awake-idle hotel load accrued
+        self.sleeps = 0              # nodes power-gated to deep sleep
+        self.wakes = 0               # sleeping nodes powered back up
+        self.queue_depth_peak = 0    # max fleet-wide queued requests seen
+        self.queue_depth_last = 0    # queued requests at last sample
+        # per-SLO-class request counters (offered / rejected / completed /
+        # met / goodput tokens), keyed by class name
+        self.slo: dict[str, dict[str, int]] = {}
         self.by_kind: dict[str, dict[str, float]] = {}
 
     # -- feeds -------------------------------------------------------------
@@ -115,8 +130,55 @@ class FleetTelemetry:
         """Recovered headroom re-admitted ``slots`` parked lanes."""
         self.unparked_slots += slots
 
+    def record_adoption(self, slots: int, tokens: int, nbytes: int,
+                        seconds: float) -> None:
+        """Parked in-flight streams resumed under a DIFFERENT serve job
+        (cross-job adoption): ``slots`` streams carrying ``tokens``
+        in-flight tokens moved ``nbytes`` over the interconnect."""
+        self.adoptions += 1
+        self.adopted_slots += slots
+        self.adopted_tokens += tokens
+        self.adoption_bytes += nbytes
+        self.adoption_s += seconds
+
     def record_completion(self) -> None:
         self.completions += 1
+
+    # -- workload / power-gating feeds -------------------------------------
+    def record_idle(self, joules: float) -> None:
+        """Hotel load the awake-idle node set burned this quantum."""
+        self.idle_energy_j += joules
+
+    def record_sleep(self) -> None:
+        self.sleeps += 1
+
+    def record_wake(self) -> None:
+        self.wakes += 1
+
+    def record_queue_depth(self, depth: int) -> None:
+        """Fleet-wide queued (admitted, not-in-service) requests."""
+        self.queue_depth_last = depth
+        if depth > self.queue_depth_peak:
+            self.queue_depth_peak = depth
+
+    def _slo_cls(self, name: str) -> dict[str, int]:
+        return self.slo.setdefault(name, {
+            "offered": 0, "rejected": 0, "completed": 0, "met": 0,
+            "goodput_tokens": 0})
+
+    def record_slo_offer(self, name: str) -> None:
+        self._slo_cls(name)["offered"] += 1
+
+    def record_slo_reject(self, name: str) -> None:
+        self._slo_cls(name)["rejected"] += 1
+
+    def record_slo_completion(self, name: str, met: bool,
+                              tokens: int) -> None:
+        c = self._slo_cls(name)
+        c["completed"] += 1
+        if met:
+            c["met"] += 1
+            c["goodput_tokens"] += tokens
 
     # -- fleet-level view --------------------------------------------------
     def counters(self, elapsed_s: float | None = None) -> dict:
@@ -141,8 +203,19 @@ class FleetTelemetry:
             "shed_slots": self.shed_slots,
             "parked_tokens": self.parked_tokens,
             "unparked_slots": self.unparked_slots,
+            "adoptions": self.adoptions,
+            "adopted_slots": self.adopted_slots,
+            "adopted_tokens": self.adopted_tokens,
+            "adoption_bytes": self.adoption_bytes,
+            "adoption_s": self.adoption_s,
+            "idle_energy_j": self.idle_energy_j,
+            "sleeps": self.sleeps,
+            "wakes": self.wakes,
+            "queue_depth_peak": self.queue_depth_peak,
+            "queue_depth_last": self.queue_depth_last,
             "j_per_token": (self.energy_j / self.tokens
                             if self.tokens else 0.0),
+            "slo": {k: dict(v) for k, v in sorted(self.slo.items())},
             "by_kind": {k: dict(v) for k, v in sorted(self.by_kind.items())},
         }
         if elapsed_s is not None:

@@ -8,6 +8,14 @@ Builds a mixed train+serve job queue (the same phase segmentations
 power-aware ``FleetScheduler``, and steers the facility budget with the
 hierarchical ``FleetPowerController``.  Prints the fleet scoreboard and
 the final grant allocation.
+
+``--workload diurnal`` switches the fleet to open-loop serving: every
+node runs an open-loop ``ServeJob`` fed by the seed-driven diurnal
+arrival trace from ``repro.workload`` (``--workload-seed`` replays
+bit-identically), with per-class SLO accounting; add ``--autoscale``
+for admission control plus the power-gating autoscaler (slot targets,
+node park/sleep/wake; ``--idle-w``/``--wake-s`` set the hotel load and
+wake latency).  Prints the per-class SLO scoreboard after the run.
 """
 
 from __future__ import annotations
@@ -89,6 +97,23 @@ def main() -> None:
                     help="cross-cabinet link bandwidth (B/s) for snapshot "
                          "transfers (default: ICI/4); placement affinity "
                          "prefers origin, then the cheapest link")
+    ap.add_argument("--workload", default=None, choices=("diurnal",),
+                    help="drive open-loop serve jobs from a seed-driven "
+                         "arrival trace with SLO accounting instead of the "
+                         "closed-loop default queue")
+    ap.add_argument("--workload-seed", type=int, default=0,
+                    help="trace seed (same seed -> bit-identical replay)")
+    ap.add_argument("--base-rps", type=float, default=5.0,
+                    help="diurnal base arrival rate (requests/s)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="enable admission control + the power-gating "
+                         "autoscaler (slot targets, node park/sleep/wake)")
+    ap.add_argument("--idle-w", type=float, default=None,
+                    help="awake-idle hotel load per node in watts "
+                         "(default: superchip power floor under --workload, "
+                         "0 otherwise)")
+    ap.add_argument("--wake-s", type=float, default=2.0,
+                    help="virtual seconds a slept node needs to wake")
     args = ap.parse_args()
 
     p_max = args.nodes * DEFAULT_SUPERCHIP.p_max
@@ -96,21 +121,56 @@ def main() -> None:
     leg = args.duration / len(fracs)
     trace = [(i * leg, f * p_max) for i, f in enumerate(fracs)]
 
+    idle_w = args.idle_w
+    if idle_w is None:
+        idle_w = DEFAULT_SUPERCHIP.p_floor if args.workload else 0.0
     cluster = SimulatedCluster(
         n_nodes=args.nodes, cabinet_size=args.cabinet_size,
         metric=args.power_metric, policy=args.policy,
         quantum_s=args.quantum, cabinet_ceil_w=args.cabinet_ceil,
-        cross_cabinet_bw=args.cross_cabinet_bw)
-    jobs = default_jobs(args.arch, args.jobs
-                        if args.jobs is not None else args.nodes,
-                        serve_value=args.serve_value,
-                        migrate=not args.no_migrate,
-                        partial=args.partial,
-                        snapshot_int8=args.snapshot_int8)
+        cross_cabinet_bw=args.cross_cabinet_bw,
+        idle_w=idle_w, wake_latency_s=args.wake_s)
+
+    workload = None
+    tracker = None
+    if args.workload == "diurnal":
+        from repro.workload import (AdmissionController, Autoscaler,
+                                    SLOTracker, WorkloadDriver,
+                                    diurnal_trace)
+        cfg = get_model_config(args.arch)
+        tracker = SLOTracker(sink=cluster.telemetry)
+        events = diurnal_trace(seed=args.workload_seed,
+                               until_s=args.duration,
+                               base_rps=args.base_rps)
+        workload = WorkloadDriver(
+            events, tracker,
+            admission=AdmissionController() if args.autoscale else None,
+            autoscaler=Autoscaler() if args.autoscale else None)
+        jobs = [ServeJob(f"svc-{i}", cfg, batch=8, prompt=256,
+                         new_tokens=64, total_requests=0, decode_chunk=8,
+                         open_loop=True, partial=True,
+                         migrate=not args.no_migrate,
+                         value=args.serve_value, slo=tracker,
+                         snapshot_int8=args.snapshot_int8)
+                for i in range(args.jobs
+                               if args.jobs is not None else args.nodes)]
+    else:
+        jobs = default_jobs(args.arch, args.jobs
+                            if args.jobs is not None else args.nodes,
+                            serve_value=args.serve_value,
+                            migrate=not args.no_migrate,
+                            partial=args.partial,
+                            snapshot_int8=args.snapshot_int8)
     print(f"[fleet] {args.nodes} nodes / {args.policy} steering; budget "
           f"{' -> '.join(f'{w:.0f}W' for _, w in trace)} over "
           f"{args.duration:.0f}s")
-    counters = cluster.run(jobs=jobs, budget=trace, until_s=args.duration)
+    if workload is not None:
+        print(f"[workload] diurnal trace: {len(events)} arrivals, "
+              f"seed {args.workload_seed}, base {args.base_rps:.1f} rps, "
+              f"autoscale={'on' if args.autoscale else 'off'}, "
+              f"idle {idle_w:.0f}W/node")
+    counters = cluster.run(jobs=jobs, budget=trace, until_s=args.duration,
+                           workload=workload)
 
     print(f"[fleet] {counters['tokens']} tokens in "
           f"{counters['virtual_s']:.0f}s virtual "
@@ -130,6 +190,23 @@ def main() -> None:
               f"{counters['shed_slots']} slots parked "
               f"({counters['parked_tokens']} in-flight tokens preserved), "
               f"{counters['unparked_slots']} re-admitted on recovery")
+    if counters["adoptions"]:
+        print(f"[adopt] {counters['adoptions']} cross-job adoptions: "
+              f"{counters['adopted_slots']} streams "
+              f"({counters['adopted_tokens']} in-flight tokens) moved "
+              f"{counters['adoption_bytes'] / 1e6:.1f} MB")
+    if tracker is not None:
+        print(f"[workload] goodput {tracker.goodput_tokens()} tokens; "
+              f"idle {counters['idle_energy_j']:.0f} J, "
+              f"{counters['sleeps']} sleeps / {counters['wakes']} wakes, "
+              f"queue peak {counters['queue_depth_peak']}")
+        for name, s in sorted(tracker.summary().items()):
+            print(f"[slo:{name}] attainment {s['attainment']:.3f} "
+                  f"({s['met']}/{s['completed']} met, "
+                  f"{s['rejected']} rejected), "
+                  f"p50 {s['p50_latency_s']:.2f}s / "
+                  f"p99 {s['p99_latency_s']:.2f}s, "
+                  f"goodput {s['goodput_tokens']} tokens")
     if cluster.allocations:
         last = cluster.allocations[-1]
         print("[grants] " + ", ".join(

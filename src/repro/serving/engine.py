@@ -401,6 +401,35 @@ class ServeEngine:
         self._ensure_stream()
         self._sched.submit(requests)
 
+    def submit(self, requests: list[Request]) -> None:
+        """Queue MORE requests onto the stream without resetting it —
+        the open-loop feed (``repro.workload`` offers arrivals while
+        earlier requests are still decoding).  Brings the stream up if
+        none is active; oversize requests are rejected up front, same
+        as ``start``."""
+        for req in requests:
+            if len(req.prompt) + req.max_new_tokens > self.max_seq:
+                raise ValueError(
+                    f"request {req.uid}: prompt {len(req.prompt)} + "
+                    f"max_new_tokens {req.max_new_tokens} exceeds "
+                    f"max_seq {self.max_seq}")
+        self._ensure_stream()
+        self._sched.submit(requests)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting for a slot (FCFS queue + snapshots not yet
+        re-admitted) — the backpressure signal autoscaling reads."""
+        sched = getattr(self, "_sched", None)
+        q = len(self._restore_q)
+        return q + (len(sched.queue) if sched is not None else 0)
+
+    @property
+    def active_slots(self) -> int:
+        """Slots currently occupied by an in-flight request."""
+        sched = getattr(self, "_sched", None)
+        return len(sched.active()) if sched is not None else 0
+
     def _export_slots(self, sched, chosen) -> list[SlotSnapshot]:
         """Export ``chosen`` active slots as warm snapshots (two host
         syncs total: the cursor vectors, then every payload in one
