@@ -6,7 +6,7 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (cell_caps, fig1_power_trace, fig2_sed_sweep,
+from benchmarks import (cell_caps, chaos, fig1_power_trace, fig2_sed_sweep,
                         fig3_ed_sweep, fleet_power, migration, roofline,
                         serving_throughput, steering_policy,
                         table1_task_profile, table2_optimal_caps,
@@ -25,6 +25,7 @@ BENCHES = [
     ("fleet", fleet_power),
     ("migrate", migration),
     ("traffic", traffic_slo),
+    ("chaos", chaos),
 ]
 
 

@@ -20,8 +20,15 @@ simulated multi-node, multi-job cluster —
                  resumes on (cross-node transfers charged on the clock)
   telemetry.py   FleetTelemetry: per-node samples -> fleet counters
                  (tokens, joules, grants, violations, migrated vs dropped
-                 tokens, SLO / queue / power-gating counters) for the
-                 re-decide loop and BENCH_fleet.json
+                 tokens, SLO / queue / power-gating / fault-recovery
+                 counters) for the re-decide loop and BENCH_fleet.json
+  faults.py      FaultInjector / FaultEvent / chaos_schedule: seed-driven
+                 deterministic fault injection (crashes, hangs, stuck or
+                 flaky cap writes, telemetry dropout/corruption,
+                 stragglers) plus the recovery machinery the cluster
+                 wires up — watchdog fencing, periodic shadow slot
+                 checkpoints, retrying cap backends, degraded-mode
+                 grants (``docs/faults.md``)
 
 One layer further up, ``repro.workload`` drives this cluster open-loop:
 ``SimulatedCluster.run(..., workload=driver)`` feeds a seed-driven
@@ -51,12 +58,15 @@ hierarchy diagram and design notes.
 from repro.fleet.cluster import (BudgetTrace, FleetNode, SimulatedCluster,
                                  VirtualClock)
 from repro.fleet.controller import FleetAllocation, FleetPowerController
+from repro.fleet.faults import (FAULT_KINDS, FaultEvent, FaultInjector,
+                                chaos_schedule)
 from repro.fleet.scheduler import (FleetScheduler, Job, ServeJob, TrainJob)
 from repro.fleet.telemetry import FleetTelemetry, NodeSample
 
 __all__ = [
     "BudgetTrace", "FleetNode", "SimulatedCluster", "VirtualClock",
     "FleetAllocation", "FleetPowerController",
+    "FAULT_KINDS", "FaultEvent", "FaultInjector", "chaos_schedule",
     "FleetScheduler", "Job", "ServeJob", "TrainJob",
     "FleetTelemetry", "NodeSample",
 ]

@@ -100,6 +100,13 @@ class FleetNode:
         self.asleep = False      # deep power-gate: draws nothing, not
                                  # assignable until woken
         self.wake_at = 0.0       # virtual time the last wake completes
+        # -- fault state (repro.fleet.faults drives these) ------------------
+        self.crashed = False     # killed by fault injection; silent until
+                                 # repaired (its job does NOT come back)
+        self.repair_at = 0.0     # virtual time the node may be repaired
+        self.stall_until = 0.0   # sleep/wake hang: alive but doing nothing
+        self.slow_factor = 1.0   # straggler: steps take this times longer
+        self.last_beat = 0.0     # heartbeat the fleet watchdog reads
 
     # -- capacity constants -------------------------------------------------
     @property
@@ -132,9 +139,10 @@ class FleetNode:
         self.wake_at = max(self.wake_at, now + latency_s)
 
     def assignable(self, now: float) -> bool:
-        """Free, awake and fully powered — the only nodes the scheduler
-        may place work on."""
-        return not self.busy and not self.asleep and self.wake_at <= now
+        """Free, awake, fully powered and healthy — the only nodes the
+        scheduler may place work on."""
+        return (not self.busy and not self.asleep and self.wake_at <= now
+                and not self.crashed and self.stall_until <= now)
 
     # -- job lifecycle ------------------------------------------------------
     def assign(self, job: Job, t: float) -> None:
@@ -151,6 +159,7 @@ class FleetNode:
                                backend=self.backend, spec=self.spec)
         self.local_t = t
         self.assigned_at = t
+        self.last_beat = t
 
     def release(self) -> Job:
         if self.job is None:
@@ -243,8 +252,25 @@ class FleetNode:
         ``until``; returns the quantum's telemetry sample (None if the
         node did nothing).  Runs through the real session: ``next_cap``
         (grant-clamped), coalesced ``apply_cap`` writes with the
-        backend's transition price, and ``observe()`` feedback."""
+        backend's transition price, and ``observe()`` feedback.
+
+        Fault semantics: a CRASHED node is silent — no steps, and no
+        heartbeat, so the watchdog's deadline eventually fires.  A
+        STALLED node (sleep/wake hang) burns the stall window without
+        beating either: from outside, a hang and a crash look identical
+        until the stall clears.  A node whose local clock is already
+        past ``until`` (occupied by a snapshot transfer) DOES beat —
+        receiving a migration is liveness, not death."""
         if self.job is None or self.pm is None:
+            return None
+        if self.crashed:
+            return None                    # silent: no work, no heartbeat
+        if self.stall_until > self.local_t:
+            self.local_t = min(until, self.stall_until)
+            if self.local_t >= until:
+                return None                # hung all quantum: no heartbeat
+        if self.local_t >= until:
+            self.last_beat = until         # transfer-occupied, but alive
             return None
         t0 = self.local_t
         tokens = steps = violations = 0
@@ -252,23 +278,33 @@ class FleetNode:
         while not self.job.done and self.local_t < until:
             step_s = step_j = 0.0
             for name, weight in self.job.step_phases():
+                fails0 = getattr(self.pm, "apply_failures", 0)
                 cap = self.pm.next_cap(name)
                 if self.pm.apply_cap(cap):   # a real write: pay for it
                     step_s += self.backend.transition_seconds
                     step_j += self.backend.transition_energy_j
-                m = self.backend.measure(self._tasks[name], cap)
-                self.pm.observe(name, m.runtime, m.energy, cap=cap,
+                eff = cap
+                if getattr(self.pm, "apply_failures", 0) > fails0:
+                    # the write never landed: the chip still runs at the
+                    # backend's last-known-good cap, not the one we asked
+                    known = getattr(self.backend, "current_cap", None)
+                    if known is not None:
+                        eff = known
+                m = self.backend.measure(self._tasks[name], eff)
+                self.pm.observe(name, m.runtime, m.energy, cap=eff,
                                 clock_fraction=m.clock_fraction)
-                step_s += m.runtime * weight
-                step_j += m.energy * weight
+                step_s += m.runtime * weight * self.slow_factor
+                step_j += m.energy * weight * self.slow_factor
                 # physical over-budget: an unattainable cap pins the chip
-                # at f_min and the draw exceeds what was granted
+                # at f_min and the draw exceeds what was granted (a stuck
+                # cap above the grant lands here too)
                 if m.avg_power > self.grant_w + 1.0:
                     violations += 1
             tokens += self.job.advance(step_s, now=self.local_t + step_s)
             steps += 1
             energy += step_j
             self.local_t += step_s
+        self.last_beat = self.local_t
         if steps == 0:
             return None
         return NodeSample(
@@ -312,7 +348,9 @@ class SimulatedCluster:
                  useful_margin_w: float = USEFUL_MARGIN_W,
                  cabinet_ceil_w=None, interconnect_bw: float | None = None,
                  cross_cabinet_bw: float | None = None,
-                 idle_w: float = 0.0, wake_latency_s: float = 2.0):
+                 idle_w: float = 0.0, wake_latency_s: float = 2.0,
+                 faults=None, watchdog_deadline_s: float | None = None,
+                 shadow_ckpt_s: float | None = None):
         if n_nodes < 1:
             raise ValueError("need at least one node")
         self.spec = spec
@@ -321,6 +359,10 @@ class SimulatedCluster:
         self.cabinet_ceil_w = cabinet_ceil_w
         self.idle_w = idle_w
         self.wake_latency_s = wake_latency_s
+        # -- chaos / recovery knobs ----------------------------------------
+        self.faults = faults                 # FaultInjector (None = calm)
+        self.watchdog_deadline_s = watchdog_deadline_s
+        self.shadow_ckpt_s = shadow_ckpt_s   # periodic slot-checkpoint cadence
         # snapshot-migration bandwidth: the chip's ICI link rate for
         # same-cabinet links unless the deployment says otherwise;
         # cross-cabinet hops leave the ICI domain (DCN-class) and default
@@ -341,6 +383,8 @@ class SimulatedCluster:
         self.telemetry = FleetTelemetry()
         self.scheduler: FleetScheduler | None = None
         self.allocations: list = []
+        if self.faults is not None:
+            self.faults.attach(self)
 
     # -- node views (deterministic order) -----------------------------------
     def free_nodes(self) -> list[FleetNode]:
@@ -353,8 +397,10 @@ class SimulatedCluster:
 
     def idle_nodes(self) -> list[FleetNode]:
         """Idle but AWAKE nodes (including ones mid-wake): the set that
-        draws ``idle_w`` each."""
-        return [n for n in self.nodes if not n.busy and not n.asleep]
+        draws ``idle_w`` each.  A crashed node draws nothing — it is
+        off, not idling hot."""
+        return [n for n in self.nodes
+                if not n.busy and not n.asleep and not n.crashed]
 
     def sleeping_nodes(self) -> list[FleetNode]:
         return [n for n in self.nodes if n.asleep]
@@ -374,6 +420,17 @@ class SimulatedCluster:
             return
         node.wake(self.clock.now, self.wake_latency_s)
         self.telemetry.record_wake()
+
+    # -- fault injection (repro.fleet.faults drives this) --------------------
+    def crash_node(self, node: FleetNode, now: float,
+                   repair_s: float) -> None:
+        """Kill a node mid-quantum: it goes silent (no steps, no
+        heartbeat) and refuses assignment until repaired.  Its job is
+        NOT released here — from the fleet's view the node simply
+        stopped answering; fencing it is the watchdog's job."""
+        node.crashed = True
+        node.repair_at = now + repair_s
+        self.telemetry.record_crash()
 
     # -- migration cost model ------------------------------------------------
     def link_bw(self, src: str, dst: str) -> float:
@@ -423,15 +480,22 @@ class SimulatedCluster:
         sched = FleetScheduler(
             list(jobs),
             min_node_w=self.nodes[0].floor_w + self.useful_margin_w,
-            margin_w=self.useful_margin_w)
+            margin_w=self.useful_margin_w,
+            watchdog_deadline_s=self.watchdog_deadline_s)
         self.scheduler = sched
         while self.clock.now < until_s:
             now = self.clock.now
             budget_w = trace.at(now)
 
-            # 1. harvest finished jobs -> free their nodes (and watts)
+            # 0. fault injection delivers due events / repairs idle nodes
+            if self.faults is not None:
+                self.faults.on_quantum(self, now)
+
+            # 1. harvest finished jobs -> free their nodes (and watts);
+            #    a crashed node is unreachable — nothing to harvest from
+            #    it until the watchdog fences it
             for node in self.busy_nodes():
-                if node.job.done:
+                if not node.crashed and node.job.done:
                     self.telemetry.record_completion()
                     sched.complete(node.release())
 
@@ -459,30 +523,75 @@ class SimulatedCluster:
             for a in events.get("adoptions", ()):
                 self.telemetry.record_adoption(a["slots"], a["tokens"],
                                                a["bytes"], a["seconds"])
+            for rec in events.get("dead", ()):
+                self.telemetry.record_dead(rec["replayed"], rec["lost"])
 
             busy = self.busy_nodes()
             if (not busy and not sched.has_work
                     and (workload is None or workload.exhausted)):
                 break
 
-            # 3. re-decide grants (hierarchical, conservation asserted)
-            if busy:
+            # 3. re-decide grants (hierarchical, conservation asserted).
+            #    Crashed nodes draw nothing and get nothing; telemetry
+            #    faults put their nodes into degraded mode (stale -> hold
+            #    last-known-good, corrupt -> conservative floor).  Grants
+            #    are applied with ``.get`` because the node set can
+            #    shrink between decide and apply (crash mid-quantum).
+            alive = [n for n in busy if not n.crashed]
+            if alive:
+                health = None
+                if self.faults is not None:
+                    health = self.faults.telemetry_health(
+                        now, [n.name for n in alive])
+                    if health:
+                        self.telemetry.record_degraded(len(health))
                 alloc = self.controller.redistribute(
-                    max(budget_w - self.idle_draw_w(), 0.0), busy, t=now,
-                    cabinet_ceils=self.cabinet_ceils(busy))
+                    max(budget_w - self.idle_draw_w(), 0.0), alive, t=now,
+                    cabinet_ceils=self.cabinet_ceils(alive), health=health)
                 self.allocations.append(alloc)
                 self.telemetry.record_grants(alloc.node_w)
-                for node in busy:
-                    node.set_grant(alloc.node_w[node.name])
+                for node in alive:
+                    node.set_grant(alloc.node_w.get(node.name,
+                                                    node.grant_w))
             for node in self.free_nodes():
                 node.set_grant(0.0)    # power-gated
 
             # 4. everyone executes on the shared clock; the awake-idle
-            #    set accrues its hotel load for the quantum
+            #    set accrues its hotel load for the quantum.  Samples
+            #    route through the injector's telemetry filter: a stale
+            #    window drops them, a corrupt window mangles them (the
+            #    bus rejects and counts the mangled ones).
             for node in busy:
                 sample = node.run_quantum(now + self.quantum_s)
+                if sample is not None and self.faults is not None:
+                    filtered = self.faults.filter_sample(sample, now)
+                    if filtered is None:
+                        self.telemetry.record_sample_dropped()
+                        continue
+                    sample = filtered
                 if sample is not None:
                     self.telemetry.record(sample)
+
+            # 4b. periodic shadow checkpoints: each serve job's warm
+            #     slots are captured and replicated off-node, so a crash
+            #     loses at most one interval of decode.  The replication
+            #     occupies the node's clock like any other transfer.
+            if self.shadow_ckpt_s is not None:
+                t_end = now + self.quantum_s
+                for node in busy:
+                    if node.crashed:
+                        continue
+                    job = node.job
+                    ckpt = getattr(job, "shadow_checkpoint", None)
+                    if ckpt is None:
+                        continue
+                    last = getattr(job, "shadow_t", None)
+                    if last is not None and t_end - last < self.shadow_ckpt_s:
+                        continue
+                    nbytes = ckpt(t_end)
+                    if nbytes > 0:
+                        node.local_t += nbytes / self.interconnect_bw
+                        self.telemetry.record_checkpoint(int(nbytes))
             if self.idle_w > 0:
                 n_idle = len(self.idle_nodes())
                 if n_idle:
@@ -492,7 +601,14 @@ class SimulatedCluster:
         # harvest jobs that finished during the final quantum — the loop
         # exit must not leave their completion unrecorded / node busy
         for node in self.busy_nodes():
-            if node.job.done:
+            if not node.crashed and node.job.done:
                 self.telemetry.record_completion()
                 sched.complete(node.release())
+        # harvest the retry backends' aggregate counters (the injector
+        # wrapped every node in a RetryingBackend at attach time)
+        if self.faults is not None:
+            self.telemetry.record_cap_retries(
+                sum(getattr(n.backend, "retries", 0) for n in self.nodes),
+                sum(getattr(n.backend, "failed_applies", 0)
+                    for n in self.nodes))
         return self.telemetry.counters(elapsed_s=self.clock.now)

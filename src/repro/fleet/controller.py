@@ -58,18 +58,26 @@ class FleetAllocation:
         """Sum(child grants) <= parent budget at every level — unless the
         budget is below the physical floors, where the floors win.  A
         cabinet with a busbar/cooling ceiling additionally holds its
-        roll-up at or below that ceiling (again, floors excepted)."""
+        roll-up at or below that ceiling (again, floors excepted).
+
+        The node set may SHRINK between decide and apply (a watchdog
+        fences a dead node mid-quantum), so ``floors`` / ``cabinet_w``
+        are consulted defensively: a grant for a node that vanished from
+        the floors dict counts a zero floor, and a cabinet whose every
+        node vanished is skipped rather than KeyError-ing the quantum."""
+        flo = {k: floors.get(k, 0.0) for k in self.node_w}
         total = sum(self.node_w.values())
-        if self.facility_w >= sum(floors.values()) - tol:
+        if self.facility_w >= sum(flo.values()) - tol:
             assert total <= self.facility_w + tol, \
                 (total, self.facility_w)
         roll, cab_floor = {}, {}
         for node, w in self.node_w.items():
             cab = node.split("/")[0]
             roll[cab] = roll.get(cab, 0.0) + w
-            cab_floor[cab] = cab_floor.get(cab, 0.0) + floors[node]
+            cab_floor[cab] = cab_floor.get(cab, 0.0) + flo[node]
         for cab, w in roll.items():
-            assert abs(self.cabinet_w[cab] - w) <= tol, (cab, w)
+            if cab in self.cabinet_w:
+                assert abs(self.cabinet_w[cab] - w) <= tol, (cab, w)
             if cab in self.cabinet_ceils:
                 limit = max(self.cabinet_ceils[cab], cab_floor[cab])
                 assert w <= limit + tol, (cab, w, limit)
@@ -96,10 +104,15 @@ class FleetPowerController:
         self.transfer_w = transfer_w
         self.rounds_per_node = rounds_per_node
         self.allocations = 0
+        # degraded mode: last grant that was decided from TRUSTED telemetry,
+        # per node — the hold value when a node's samples go stale
+        self._last_good: dict[str, float] = {}
+        self.degraded_allocations = 0
 
     # -- the re-decide entry point ----------------------------------------
     def redistribute(self, budget_w: float, nodes: list, t: float = 0.0,
                      cabinet_ceils: "dict[str, float] | None" = None,
+                     health: "dict[str, str] | None" = None,
                      ) -> FleetAllocation:
         """Split ``budget_w`` across busy ``nodes`` (FleetNode-likes
         exposing name/cabinet/floor_w/ceil_w/request_w()/throughput_at(),
@@ -108,17 +121,40 @@ class FleetPowerController:
         ``cabinet_ceils`` maps cabinets to busbar/cooling limits: when
         given, allocation runs through a middle ``weighted_split`` level
         (facility -> cabinet budgets -> node grants) and no cabinet's
-        roll-up ever exceeds its ceiling — enforcement, not accounting."""
+        roll-up ever exceeds its ceiling — enforcement, not accounting.
+
+        ``health`` marks nodes whose telemetry cannot be trusted this
+        quantum (degraded mode): ``"stale"`` pins the node at its
+        last-known-good grant (its requests/sensitivities are stale too),
+        ``"corrupt"`` clamps it to its conservative floor — a node
+        actively lying about its draw gets no discretionary watts.
+        Pinned grants participate in the same water-fill with
+        floor == ceil == pin, so conservation stays structural; when the
+        budget cannot cover the pins plus everyone else's floors, the
+        pins collapse to floors (physics wins, as everywhere)."""
         self.allocations += 1
         if not nodes:
             return FleetAllocation(t, budget_w, {}, {}, {})
         nodes = sorted(nodes, key=lambda n: n.name)
         floors = {n.name: n.floor_w for n in nodes}
         ceils = dict(cabinet_ceils) if cabinet_ceils else {}
+        pinned: dict[str, float] = {}
+        for n in nodes:
+            mode = (health or {}).get(n.name)
+            if mode is None:
+                continue
+            pin = self._last_good.get(n.name, n.floor_w) \
+                if mode == "stale" else n.floor_w
+            pinned[n.name] = min(max(pin, n.floor_w), n.ceil_w)
+        if pinned:
+            self.degraded_allocations += len(pinned)
+            others = sum(w for k, w in floors.items() if k not in pinned)
+            if sum(pinned.values()) + others > budget_w:
+                pinned = {k: floors[k] for k in pinned}
         if self.policy == "even":
-            grants = self._even(budget_w, nodes, floors, ceils)
+            grants = self._even(budget_w, nodes, floors, ceils, pinned)
         else:
-            grants = self._steer(budget_w, nodes, floors, ceils)
+            grants = self._steer(budget_w, nodes, floors, ceils, pinned)
         cabinets: dict[str, float] = {}
         for n in nodes:
             cabinets[n.cabinet] = cabinets.get(n.cabinet, 0.0) \
@@ -129,6 +165,9 @@ class FleetPowerController:
             if self.policy == "sensitivity" else {},
             cabinet_ceils=ceils)
         alloc.assert_conserved(floors)
+        for k, g in grants.items():
+            if k not in pinned:
+                self._last_good[k] = g
         return alloc
 
     # -- the middle level: facility -> cabinet budgets ---------------------
@@ -162,36 +201,52 @@ class FleetPowerController:
     # -- the even baseline -------------------------------------------------
     def _even(self, budget_w: float, nodes: list,
               floors: dict[str, float],
-              cab_ceils: dict[str, float]) -> dict[str, float]:
+              cab_ceils: dict[str, float],
+              pinned: "dict[str, float] | None" = None) -> dict[str, float]:
         """Static even split, blind to requests and sensitivities — but
         still conserving: an equal-weight water-fill against each node's
         HARDWARE ceiling only, so heterogeneous floors can't push the sum
         past the budget.  With cabinet ceilings the same split runs per
-        cabinet inside the middle-level budgets."""
+        cabinet inside the middle-level budgets.  Degraded-mode pins run
+        through the same fill with floor == ceil == pin."""
+        pinned = pinned or {}
         hw_ceil = {n.name: n.ceil_w for n in nodes}
+        flo = dict(floors)
+        for k, w in pinned.items():
+            hw_ceil[k] = w
+            flo[k] = w
         if not cab_ceils:
-            return weighted_split(hw_ceil, budget_w, floor=floors,
+            return weighted_split(hw_ceil, budget_w, floor=flo,
                                   ceil=hw_ceil,
                                   weights={k: 1.0 for k in hw_ceil})
-        budgets, by_cab = self._cabinet_budgets(budget_w, nodes, floors,
+        budgets, by_cab = self._cabinet_budgets(budget_w, nodes, flo,
                                                 cab_ceils, hw_ceil)
         grants: dict[str, float] = {}
         for cab in sorted(by_cab):
             ns = by_cab[cab]
             grants.update(weighted_split(
-                {n.name: n.ceil_w for n in ns}, budgets[cab],
-                floor={n.name: floors[n.name] for n in ns},
-                ceil={n.name: n.ceil_w for n in ns},
+                {n.name: hw_ceil[n.name] for n in ns}, budgets[cab],
+                floor={n.name: flo[n.name] for n in ns},
+                ceil={n.name: hw_ceil[n.name] for n in ns},
                 weights={n.name: 1.0 for n in ns}))
         return grants
 
     # -- sensitivity steering ---------------------------------------------
     def _steer(self, budget_w: float, nodes: list,
                floors: dict[str, float],
-               cab_ceils: dict[str, float]) -> dict[str, float]:
+               cab_ceils: dict[str, float],
+               pinned: "dict[str, float] | None" = None) -> dict[str, float]:
+        pinned = pinned or {}
         by_name = {n.name: n for n in nodes}
         requests = {n.name: n.request_w() for n in nodes}
         ceils = {n.name: min(requests[n.name], n.ceil_w) for n in nodes}
+        floors = dict(floors)
+        for k, w in pinned.items():
+            # untrusted telemetry: the pin replaces the node's (equally
+            # untrusted) request, as an exact floor == ceil water-fill term
+            requests[k] = w
+            ceils[k] = w
+            floors[k] = w
         if not cab_ceils:
             # equal-weight water-fill: every node gets at least
             # min(budget/n, request); slack from saturated (low-request)
@@ -251,6 +306,8 @@ class FleetPowerController:
         for _ in range(self.rounds_per_node * len(nodes)):
             best_gain, recipient = 0.0, None
             for k in sorted(grants):
+                if k in pinned:
+                    continue  # degraded: holds its pin, trades nothing
                 g = grants[k]
                 if g + dw <= ceils[k]:
                     gain = thr(k, g + dw) - thr(k, g)
@@ -266,7 +323,8 @@ class FleetPowerController:
             cross_ok = cab_headroom(rcab) >= dw
             best_loss, donor = float("inf"), None
             for k in sorted(grants):
-                if k == recipient or grants[k] - dw < floors[k]:
+                if k == recipient or k in pinned \
+                        or grants[k] - dw < floors[k]:
                     continue
                 if cab_of[k] != rcab and not cross_ok:
                     continue

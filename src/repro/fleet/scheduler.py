@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from collections import deque
 from typing import Protocol, runtime_checkable
 
@@ -105,17 +106,23 @@ class TrainJob:
     max_restarts: int = 8
     backoff_s: float = 0.1
     value: float = 1.0
+    backoff_jitter: float = 0.0    # >0: seeded jitter de-lockstepping
+                                   # simultaneous restarts (seed = name)
     kind: str = dataclasses.field(default="train", init=False)
     steps_done: int = dataclasses.field(default=0, init=False)
 
     def __post_init__(self):
-        self.supervisor = StepwiseSupervisor(max_restarts=self.max_restarts,
-                                             backoff_s=self.backoff_s)
+        self.supervisor = StepwiseSupervisor(
+            max_restarts=self.max_restarts, backoff_s=self.backoff_s,
+            jitter=self.backoff_jitter,
+            seed=zlib.crc32(self.name.encode()))
         self._tasks: list[Task] | None = None
         self.last_preempt_dropped = 0   # tokens rolled back at last preempt
         self.dropped_total = 0          # cumulative rolled-back tokens
         self.snapshot_tokens = 0        # training migrates via checkpoint,
         self.snapshot_bytes = 0         # not via live state: always 0
+        self.last_crash_lost = 0        # tokens a crash rolled back
+        self.last_crash_replayed = 0    # training replays via real ckpt: 0
 
     @property
     def done(self) -> bool:
@@ -148,6 +155,20 @@ class TrainJob:
         self.last_preempt_dropped = rolled * self.tokens_per_step()
         self.dropped_total += self.last_preempt_dropped
         return self.supervisor.preempted()
+
+    def on_crash(self) -> float:
+        """Uncooperative death (watchdog verdict): same rollback as a
+        preemption — training already restarts from its real checkpoint
+        — but charged to the supervisor as a CRASH.  Raises RuntimeError
+        once the restart budget is exhausted (job abandoned)."""
+        rolled = self.steps_done % self.ckpt_every
+        self.steps_done -= rolled
+        self.last_preempt_dropped = rolled * self.tokens_per_step()
+        self.dropped_total += self.last_preempt_dropped
+        self.last_crash_lost = self.last_preempt_dropped
+        self.last_crash_replayed = 0
+        self.snapshot_tokens = self.snapshot_bytes = 0
+        return self.supervisor.crashed("node crash")
 
 
 @dataclasses.dataclass
@@ -237,12 +258,16 @@ class ServeJob:
     snapshot_int8: bool = False
     open_loop: bool = False
     slo: object = None             # Optional[repro.workload.SLOTracker]
+    backoff_jitter: float = 0.0    # >0: seeded jitter de-lockstepping
+                                   # simultaneous restarts (seed = name)
     kind: str = dataclasses.field(default="serve", init=False)
     emitted: int = dataclasses.field(default=0, init=False)
 
     def __post_init__(self):
-        self.supervisor = StepwiseSupervisor(max_restarts=self.max_restarts,
-                                             backoff_s=self.backoff_s)
+        self.supervisor = StepwiseSupervisor(
+            max_restarts=self.max_restarts, backoff_s=self.backoff_s,
+            jitter=self.backoff_jitter,
+            seed=zlib.crc32(self.name.encode()))
         self._tasks: list[Task] | None = None
         self._tasks_key: int | None = None
         self._started = False
@@ -264,6 +289,12 @@ class ServeJob:
         self.slot_target: int | None = None   # autoscaler's regrow ceiling
         self._pending = deque()               # modeled: offered, not placed
         self._arrivals: dict = {}             # engine: uid -> ArrivalEvent
+        # -- shadow-checkpoint / crash state --------------------------------
+        self._shadow: dict | None = None      # last shadow checkpoint
+        self.shadow_t: float | None = None    # when it was taken
+        self._done_uids: set = set()          # open-loop completions seen
+        self.last_crash_lost = 0              # tokens the last crash lost
+        self.last_crash_replayed = 0          # tokens replayed from shadow
         if self.engine is not None and self.snapshot_int8:
             self.engine.snapshot_int8 = True
 
@@ -351,6 +382,8 @@ class ServeJob:
                     SlotSnapshot(request=req, rem=req.max_new_tokens))
 
     def _record_completion(self, ev, now: float | None) -> None:
+        if ev is not None:
+            self._done_uids.add(ev.uid)   # crash recovery must not replay
         if now is None or ev is None:
             return
         latency = now - ev.t
@@ -707,6 +740,155 @@ class ServeJob:
         self._active_cap = k
         return 0.0
 
+    # -- shadow checkpointing & crash recovery -------------------------------
+    def shadow_checkpoint(self, now: float) -> int:
+        """Capture the job's CURRENT in-flight state as a shadow copy —
+        non-destructively, while serving continues — so a node crash
+        loses at most one checkpoint interval of decode.  Engine mode
+        reuses ``ServeEngine.checkpoint`` (portable ``SlotSnapshot``s,
+        int8-optional); modeled mode copies the per-lane accounting.
+        Returns the payload bytes captured (what replicating the shadow
+        off-node would move — the cluster charges that on the clock)."""
+        if self.engine is not None:
+            if not self._started:
+                return 0
+            snaps = self.engine.checkpoint()
+            snaps += [dataclasses.replace(s, request=s.request.clone())
+                      for s in self._parked]
+            self._shadow = {"snaps": snaps}
+            self.shadow_t = now
+            return sum(s.payload_bytes for s in snaps)
+        slots = [_SimSlot(s.progress, s.started, s.req)
+                 for s in self._slots]
+        parked = [_SimSlot(s.progress, s.started, s.req)
+                  for s in self._parked]
+        self._shadow = {"slots": slots, "parked": parked,
+                        "pending": list(self._pending),
+                        "emitted": self.emitted}
+        self.shadow_t = now
+        return sum(
+            self._slot_bytes(s.progress,
+                             s.req.prompt_len if s.req is not None else None)
+            for s in slots + parked)
+
+    def _live_events(self) -> list:
+        """Open-loop arrival events currently owned by this job (in a
+        lane, parked, or still pending)."""
+        evs = [s.req for s in self._slots if s.req is not None]
+        evs += [s.req for s in self._parked if s.req is not None]
+        evs += list(self._pending)
+        return evs
+
+    def on_crash(self) -> float:
+        """Uncooperative death: the node vanished mid-quantum, nothing
+        was drained.  Un-checkpointed decode since the last shadow is
+        LOST (refunded out of ``emitted`` — it must be redone); the
+        shadow's streams are re-armed for bit-identical replay on
+        whichever node adopts the job.  Without a shadow this is the
+        full drop-and-restart.  Completions recorded since the shadow
+        are never replayed (no double-counted SLO events).  Charges the
+        supervisor as a crash — raises RuntimeError once the restart
+        budget is exhausted (the scheduler then abandons the job)."""
+        self.snapshot_tokens = self.snapshot_bytes = 0
+        self.last_preempt_dropped = 0
+        lost = replayed = 0
+        if self.engine is not None:
+            from repro.serving.engine import SlotSnapshot
+            if self._started:
+                self.engine.abandon()
+                self._started = False
+            live = [r for r in (self.requests or []) if not r.done]
+            done = [r for r in (self.requests or []) if r.done]
+            shadow = (self._shadow or {}).get("snaps", [])
+            if shadow:
+                live_uids = {r.uid for r in live}
+                snaps, ckpt_len = [], {}
+                for s in shadow:
+                    if s.request.uid not in live_uids:
+                        continue   # finished since the shadow: stays done
+                    ckpt_len[s.request.uid] = len(s.request.generated)
+                    # re-clone: a SECOND crash replays the same shadow
+                    snaps.append(dataclasses.replace(
+                        s, request=s.request.clone()))
+                covered = {s.request.uid for s in snaps}
+                for r in live:
+                    if r.uid not in covered:   # arrived after the shadow
+                        snaps.append(SlotSnapshot(
+                            request=Request(r.uid, list(r.prompt),
+                                            r.max_new_tokens),
+                            rem=r.max_new_tokens))
+                lost = sum(len(r.generated) - ckpt_len.get(r.uid, 0)
+                           for r in live)
+                replayed = sum(len(s.request.generated)
+                               for s in snaps if s.warm)
+                self._snapshots = snaps
+                self.requests = done + [s.request for s in snaps]
+                self.snapshot_tokens = replayed
+                self.snapshot_bytes = sum(s.payload_bytes for s in snaps)
+            else:
+                lost = sum(len(r.generated) for r in live)
+                for r in live:
+                    r.generated.clear()
+                self._snapshots = None
+        elif self.open_loop:
+            in_flight = self._in_flight_modeled()
+            if self._shadow is not None:
+                def revive(lane: _SimSlot) -> _SimSlot:
+                    if lane.req is not None \
+                            and lane.req.uid in self._done_uids:
+                        return _SimSlot()   # completed since the shadow
+                    return _SimSlot(lane.progress, lane.started, lane.req)
+                slots = [revive(s) for s in self._shadow["slots"]]
+                slots += [revive(s) for s in self._shadow["parked"]]
+                pending = deque(ev for ev in self._shadow["pending"]
+                                if ev.uid not in self._done_uids)
+                covered = {s.req.uid for s in slots
+                           if s.req is not None}
+                covered |= {ev.uid for ev in pending}
+                extras = [ev for ev in self._live_events()
+                          if ev.uid not in covered]
+                extras.sort(key=lambda ev: (ev.t, ev.uid))
+                pending.extend(extras)
+                replayed = sum(s.progress for s in slots)
+                lost = in_flight - replayed
+                self._slots = slots
+                self._pending = pending
+                self.snapshot_tokens = replayed
+                self.snapshot_bytes = sum(
+                    self._slot_bytes(
+                        s.progress,
+                        s.req.prompt_len if s.req is not None else None)
+                    for s in slots)
+            else:
+                lost = in_flight
+                evs = sorted(self._live_events(),
+                             key=lambda ev: (ev.t, ev.uid))
+                self._pending = deque(evs)
+                self._slots = [_SimSlot() for _ in range(self.batch)]
+        else:
+            in_flight = self._in_flight_modeled()
+            if self._shadow is not None:
+                self._slots = [
+                    _SimSlot(s.progress, s.started, s.req)
+                    for s in self._shadow["slots"] + self._shadow["parked"]]
+                lost = max(0, self.emitted - self._shadow["emitted"])
+                replayed = sum(s.progress for s in self._slots)
+                self.snapshot_tokens = replayed
+                self.snapshot_bytes = sum(
+                    self._slot_bytes(s.progress) for s in self._slots)
+            else:
+                lost = in_flight
+                self._slots = self._slots + self._parked
+                for s in self._slots:
+                    s.progress = 0
+        self._parked = []
+        self._active_cap = self.batch
+        self.emitted -= lost
+        self.dropped_total += lost
+        self.last_crash_lost = lost
+        self.last_crash_replayed = replayed
+        return self.supervisor.crashed("node crash")
+
     def grow(self, max_slots: int) -> int:
         """Raise the active-slot cap back toward ``capacity`` and
         re-admit parked lanes (oldest first); returns the slots
@@ -754,12 +936,19 @@ class FleetScheduler:
     preempted jobs (snapshot carriers with placement affinity), regrow
     partially shed jobs into recovered headroom, admit fresh work."""
 
-    def __init__(self, jobs, min_node_w: float, margin_w: float = 0.0):
+    def __init__(self, jobs, min_node_w: float, margin_w: float = 0.0,
+                 watchdog_deadline_s: float | None = None):
         self.queue: deque[Job] = deque(jobs)
         self.min_node_w = min_node_w
         self.margin_w = margin_w
         self.paused: list[_Paused] = []
         self.completed: list[Job] = []
+        #: declare a busy node dead after this many virtual seconds
+        #: without a heartbeat (``FleetNode.last_beat``); None disables
+        #: the watchdog — the no-recovery baseline, where a crashed
+        #: node's job hangs forever
+        self.watchdog_deadline_s = watchdog_deadline_s
+        self.failed: list[Job] = []   # jobs abandoned: restart budget spent
 
     @property
     def has_work(self) -> bool:
@@ -833,6 +1022,41 @@ class FleetScheduler:
         admitted, preempted, migrations = [], [], []
         partials, unparked = [], []
         dropped_tokens = kept_tokens = 0
+
+        # 0. watchdog: a busy node that has missed quanta past the
+        #    deadline is declared dead — its job is fenced off the node
+        #    and re-queued through the supervisor's CRASH budget (shadow
+        #    checkpoints bound what the crash cost; a job whose budget
+        #    is spent is abandoned).  The node itself stays unassignable
+        #    until repaired.  A HUNG node trips the same verdict — the
+        #    watchdog cannot tell a hang from a crash, by design — and
+        #    its job simply resumes elsewhere from its last shadow.
+        dead = []
+        if self.watchdog_deadline_s is not None:
+            for node in sorted(cluster.busy_nodes(), key=lambda n: n.name):
+                beat = getattr(node, "last_beat", None)
+                if beat is None or t - beat <= self.watchdog_deadline_s:
+                    continue
+                job = node.release()
+                rec = {"node": node.name, "job": job.name,
+                       "replayed": 0, "lost": 0}
+                on_crash = getattr(job, "on_crash", None)
+                try:
+                    backoff = on_crash() if on_crash is not None \
+                        else job.preempt()
+                    rec["replayed"] = getattr(job, "last_crash_replayed", 0)
+                    rec["lost"] = getattr(job, "last_crash_lost", 0)
+                    # origin stays the dead node: the shadow replica
+                    # lives in its cabinet, so the adopting node pays
+                    # the transfer priced from there (value-first resume
+                    # via the ordinary step-2 path)
+                    self.paused.append(_Paused(job, eligible_at=t + backoff,
+                                               origin=node.name))
+                except RuntimeError:
+                    rec["abandoned"] = True
+                    rec["lost"] = getattr(job, "last_crash_lost", 0)
+                    self.failed.append(job)
+                dead.append(rec)
 
         # 1. shed while the shrunken envelope can't float the busy set:
         #    lowest token-value first (a background train token is shed
@@ -1005,5 +1229,6 @@ class FleetScheduler:
         return {"admitted": admitted, "preempted": preempted,
                 "migrations": migrations, "partials": partials,
                 "unparked": unparked, "adoptions": adoptions,
+                "dead": dead,
                 "dropped_tokens": dropped_tokens,
                 "kept_tokens": kept_tokens}

@@ -73,6 +73,18 @@ class FleetTelemetry:
         self.wakes = 0               # sleeping nodes powered back up
         self.queue_depth_peak = 0    # max fleet-wide queued requests seen
         self.queue_depth_last = 0    # queued requests at last sample
+        # -- fault / recovery (repro.fleet.faults drives these) ------------
+        self.crashes = 0             # nodes killed by fault injection
+        self.dead_declared = 0       # watchdog verdicts (deadline missed)
+        self.checkpoints = 0         # shadow checkpoints taken
+        self.checkpoint_bytes = 0    # shadow snapshot payload captured
+        self.replayed_tokens = 0     # in-flight tokens restored from shadows
+        self.lost_tokens = 0         # in-flight tokens a crash destroyed
+        self.cap_retries = 0         # RetryingBackend retry attempts
+        self.failed_cap_applies = 0  # applies that exhausted the budget
+        self.degraded_quanta = 0     # node-quanta allocated in degraded mode
+        self.corrupt_samples = 0     # NodeSamples rejected by validation
+        self.dropped_samples = 0     # NodeSamples lost to telemetry dropout
         # per-SLO-class request counters (offered / rejected / completed /
         # met / goodput tokens), keyed by class name
         self.slo: dict[str, dict[str, int]] = {}
@@ -80,6 +92,12 @@ class FleetTelemetry:
 
     # -- feeds -------------------------------------------------------------
     def record(self, s: NodeSample) -> None:
+        # Corrupt telemetry must not poison the aggregates: a sample whose
+        # counters are physically impossible is rejected (and counted) —
+        # the degraded-mode controller handles the node it came from.
+        if s.tokens < 0 or s.energy_j < 0 or s.busy_s < 0 or s.steps < 0:
+            self.corrupt_samples += 1
+            return
         self.samples.append(s)
         if len(self.samples) > self.history_limit:
             del self.samples[:len(self.samples) - self.history_limit]
@@ -161,6 +179,37 @@ class FleetTelemetry:
         if depth > self.queue_depth_peak:
             self.queue_depth_peak = depth
 
+    # -- fault / recovery feeds --------------------------------------------
+    def record_crash(self) -> None:
+        """Fault injection killed a node mid-quantum."""
+        self.crashes += 1
+
+    def record_dead(self, replayed: int, lost: int) -> None:
+        """The watchdog declared a node dead and re-queued its job:
+        ``replayed`` in-flight tokens came back from shadow checkpoints,
+        ``lost`` (decoded after the last checkpoint) must be redone."""
+        self.dead_declared += 1
+        self.replayed_tokens += replayed
+        self.lost_tokens += lost
+
+    def record_checkpoint(self, nbytes: int) -> None:
+        """One periodic shadow checkpoint of a job's warm slots."""
+        self.checkpoints += 1
+        self.checkpoint_bytes += nbytes
+
+    def record_cap_retries(self, retries: int, failures: int) -> None:
+        """Aggregate RetryingBackend counters harvested at run end."""
+        self.cap_retries += retries
+        self.failed_cap_applies += failures
+
+    def record_degraded(self, nodes: int) -> None:
+        """``nodes`` allocations pinned by degraded mode this quantum."""
+        self.degraded_quanta += nodes
+
+    def record_sample_dropped(self) -> None:
+        """A NodeSample never arrived (telemetry dropout window)."""
+        self.dropped_samples += 1
+
     def _slo_cls(self, name: str) -> dict[str, int]:
         return self.slo.setdefault(name, {
             "offered": 0, "rejected": 0, "completed": 0, "met": 0,
@@ -213,6 +262,17 @@ class FleetTelemetry:
             "wakes": self.wakes,
             "queue_depth_peak": self.queue_depth_peak,
             "queue_depth_last": self.queue_depth_last,
+            "crashes": self.crashes,
+            "dead_declared": self.dead_declared,
+            "checkpoints": self.checkpoints,
+            "checkpoint_bytes": self.checkpoint_bytes,
+            "replayed_tokens": self.replayed_tokens,
+            "lost_tokens": self.lost_tokens,
+            "cap_retries": self.cap_retries,
+            "failed_cap_applies": self.failed_cap_applies,
+            "degraded_quanta": self.degraded_quanta,
+            "corrupt_samples": self.corrupt_samples,
+            "dropped_samples": self.dropped_samples,
             "j_per_token": (self.energy_j / self.tokens
                             if self.tokens else 0.0),
             "slo": {k: dict(v) for k, v in sorted(self.slo.items())},

@@ -16,6 +16,12 @@ bit-identically), with per-class SLO accounting; add ``--autoscale``
 for admission control plus the power-gating autoscaler (slot targets,
 node park/sleep/wake; ``--idle-w``/``--wake-s`` set the hotel load and
 wake latency).  Prints the per-class SLO scoreboard after the run.
+
+``--chaos-seed N`` injects a deterministic fault schedule (crashes,
+hangs, stuck/flaky cap writes, telemetry dropout/corruption, a
+straggler — ``docs/faults.md``); pair it with ``--watchdog-s`` to
+fence dead nodes and ``--ckpt-s`` for periodic shadow slot
+checkpoints that bound crash loss to one interval.
 """
 
 from __future__ import annotations
@@ -114,6 +120,20 @@ def main() -> None:
                          "0 otherwise)")
     ap.add_argument("--wake-s", type=float, default=2.0,
                     help="virtual seconds a slept node needs to wake")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a seed-driven fault schedule (crashes, "
+                         "hangs, cap faults, telemetry faults, a "
+                         "straggler); same seed -> bit-identical replay")
+    ap.add_argument("--watchdog-s", type=float, default=None,
+                    help="heartbeat deadline (virtual s) after which a "
+                         "silent busy node is declared dead and its job "
+                         "re-queued")
+    ap.add_argument("--ckpt-s", type=float, default=None,
+                    help="shadow slot-checkpoint cadence (virtual s): a "
+                         "crash loses at most this much decode")
+    ap.add_argument("--repair-s", type=float, default=15.0,
+                    help="virtual seconds a crashed node takes to repair "
+                         "once fenced")
     args = ap.parse_args()
 
     p_max = args.nodes * DEFAULT_SUPERCHIP.p_max
@@ -124,12 +144,23 @@ def main() -> None:
     idle_w = args.idle_w
     if idle_w is None:
         idle_w = DEFAULT_SUPERCHIP.p_floor if args.workload else 0.0
+    injector = None
+    if args.chaos_seed is not None:
+        from repro.fleet import FaultInjector, chaos_schedule
+        names = [f"cab{i // args.cabinet_size}/n{i:02d}"
+                 for i in range(args.nodes)]
+        schedule = chaos_schedule(args.chaos_seed, names, args.duration,
+                                  repair_s=args.repair_s)
+        injector = FaultInjector(schedule, repair_s=args.repair_s,
+                                 seed=args.chaos_seed)
     cluster = SimulatedCluster(
         n_nodes=args.nodes, cabinet_size=args.cabinet_size,
         metric=args.power_metric, policy=args.policy,
         quantum_s=args.quantum, cabinet_ceil_w=args.cabinet_ceil,
         cross_cabinet_bw=args.cross_cabinet_bw,
-        idle_w=idle_w, wake_latency_s=args.wake_s)
+        idle_w=idle_w, wake_latency_s=args.wake_s,
+        faults=injector, watchdog_deadline_s=args.watchdog_s,
+        shadow_ckpt_s=args.ckpt_s)
 
     workload = None
     tracker = None
@@ -190,6 +221,21 @@ def main() -> None:
               f"{counters['shed_slots']} slots parked "
               f"({counters['parked_tokens']} in-flight tokens preserved), "
               f"{counters['unparked_slots']} re-admitted on recovery")
+    if injector is not None:
+        print(f"[chaos] seed {args.chaos_seed}: "
+              f"{len(injector.delivered)} faults delivered — "
+              f"{counters['crashes']} crashes "
+              f"({counters['dead_declared']} fenced by the watchdog), "
+              f"{counters['cap_retries']} cap retries / "
+              f"{counters['failed_cap_applies']} gave up, "
+              f"{counters['degraded_quanta']} degraded node-quanta, "
+              f"{counters['dropped_samples']} stale / "
+              f"{counters['corrupt_samples']} corrupt samples")
+        if counters["checkpoints"]:
+            print(f"[chaos] {counters['checkpoints']} shadow checkpoints "
+                  f"({counters['checkpoint_bytes'] / 1e6:.1f} MB): "
+                  f"{counters['replayed_tokens']} tokens replayed, "
+                  f"{counters['lost_tokens']} lost to crashes")
     if counters["adoptions"]:
         print(f"[adopt] {counters['adoptions']} cross-job adoptions: "
               f"{counters['adopted_slots']} streams "

@@ -10,7 +10,11 @@ backends return ``None`` and the manager falls back to its table.
   SimulatedBackend  drives the energy ledger via the DVFS model (default)
   LoggingBackend    wraps any backend, recording every applied cap
   HwmonBackend      stub for real sysfs power-API writes (gated: inert
-                    unless the hwmon node exists)
+                    unless the hwmon node exists; apply/measure failures
+                    are counted, never raised mid-phase)
+  RetryingBackend   decorator: bounded retries with seeded-jitter
+                    exponential backoff, last-known-good fallback when
+                    the retry budget is exhausted
 """
 
 from __future__ import annotations
@@ -101,9 +105,13 @@ class LoggingBackend:
 class HwmonBackend:
     """Real power-API write path (stub): ``power1_cap`` under a hwmon node,
     in microwatts.  Inert in this container — ``available()`` is False when
-    the node does not exist, and ``apply`` refuses rather than pretending.
+    the node does not exist.
 
-    On GH200-class hosts the node is e.g.
+    A flipped-read-only or vanished hwmon node must not kill a run
+    mid-phase: apply failures (missing node, ``OSError``,
+    ``PermissionError``) are counted in ``errors`` and otherwise
+    swallowed; the manager's phase loop keeps running at whatever cap
+    last stuck.  On GH200-class hosts the node is e.g.
     ``/sys/class/hwmon/hwmon*/device/power1_cap``; deployment wires the
     concrete path in.
     """
@@ -113,18 +121,104 @@ class HwmonBackend:
 
     def __init__(self, node: str = "/sys/class/hwmon/hwmon0/power1_cap"):
         self.node = node
+        self.errors = 0
+        self.current_cap: float | None = None
 
     def available(self) -> bool:
         import os
-        return os.access(self.node, os.W_OK)
+        try:
+            return os.access(self.node, os.W_OK)
+        except OSError:
+            return False
 
     def apply(self, cap: float) -> None:
-        if not self.available():
-            raise RuntimeError(
-                f"hwmon node {self.node} not writable; use "
-                "SimulatedBackend in environments without power telemetry")
-        with open(self.node, "w") as f:
-            f.write(str(int(cap * 1e6)))  # watts -> microwatts
+        try:
+            with open(self.node, "w") as f:
+                f.write(str(int(cap * 1e6)))  # watts -> microwatts
+            self.current_cap = cap
+        except (OSError, PermissionError):
+            self.errors += 1
 
     def measure(self, task: Task, cap: float) -> None:
         return None  # write-only: measurements come from real telemetry
+
+
+def jitter_unit(seed: int, n: int) -> float:
+    """Deterministic hash of (seed, n) to [0, 1): stable across processes
+    (unlike ``hash``) and free of shared-RNG ordering hazards."""
+    x = (seed * 0x9E3779B1 + n * 0x85EBCA6B + 0x27D4EB2F) & 0xFFFFFFFF
+    x ^= x >> 15
+    x = (x * 0x2C1B3C6D) & 0xFFFFFFFF
+    x ^= x >> 12
+    return x / 2 ** 32
+
+
+@dataclasses.dataclass
+class RetryingBackend:
+    """Decorator: tolerate transient apply/measure failures.
+
+    ``apply`` retries up to ``max_retries`` extra attempts with
+    exponential backoff (seeded jitter keeps many nodes from hammering a
+    shared power API in lockstep while staying deterministic).  When the
+    budget is exhausted the failure is swallowed: ``current_cap`` keeps
+    the last cap that actually stuck (last-known-good fallback) and
+    ``failed_applies`` is incremented so callers — ``PowerManager``
+    checks exactly this — can see the write did not land.  ``measure``
+    failures degrade to ``None`` (manager falls back to its table).
+
+    Backoff is *accounted*, not slept, unless a ``sleep_fn`` is given:
+    virtual-clock callers read ``backoff_total_s`` and charge it
+    themselves.
+    """
+
+    inner: CapBackend
+    max_retries: int = 3
+    backoff_s: float = 1e-3
+    jitter: float = 0.25
+    seed: int = 0
+    sleep_fn: object = None
+    retries: int = 0
+    failed_applies: int = 0
+    failed_measures: int = 0
+    backoff_total_s: float = 0.0
+    current_cap: float | None = None
+
+    def apply(self, cap: float) -> None:
+        for attempt in range(self.max_retries + 1):
+            try:
+                self.inner.apply(cap)
+                self.current_cap = cap
+                return
+            except (OSError, RuntimeError):
+                if attempt == self.max_retries:
+                    self.failed_applies += 1
+                    return  # fall back to last-known-good (current_cap)
+                self.retries += 1
+                delay = self.backoff_s * 2 ** attempt
+                delay *= 1.0 + self.jitter * jitter_unit(self.seed,
+                                                         self.retries)
+                self.backoff_total_s += delay
+                if self.sleep_fn is not None:
+                    self.sleep_fn(delay)
+
+    def measure(self, task: Task, cap: float) -> Optional[TaskMeasurement]:
+        try:
+            return self.inner.measure(task, cap)
+        except (OSError, RuntimeError):
+            self.failed_measures += 1
+            return None
+
+    @property
+    def transition_seconds(self) -> float:
+        return self.inner.transition_seconds
+
+    @property
+    def transition_energy_j(self) -> float:
+        return self.inner.transition_energy_j
+
+    def __getattr__(self, name: str):
+        # Forward e.g. SimulatedBackend.sweep/writes so capability probes
+        # (hasattr) see exactly what the inner backend offers.
+        if name == "inner":
+            raise AttributeError(name)
+        return getattr(self.inner, name)

@@ -156,6 +156,7 @@ class PowerManager:
         self.history_limit = history_limit
         self.history: list[PhaseRecord] = []
         self.transitions = 0
+        self.apply_failures = 0
         # aggregate modeled totals across ALL phase entries — unlike
         # ``history`` these are never trimmed, so long sessions (one
         # decode chunk per K served tokens) can report totals exactly
@@ -272,11 +273,26 @@ class PowerManager:
 
     def apply_cap(self, cap: float) -> bool:
         """Write ``cap`` through the backend unless it is already set
-        (coalescing — a no-op write costs nothing)."""
+        (coalescing — a no-op write costs nothing).
+
+        Failure-tolerant: a backend that raises ``OSError``/``RuntimeError``
+        or a retrying decorator that exhausts its budget (visible as
+        ``current_cap`` diverging from the requested cap) does not kill the
+        phase — ``apply_failures`` is incremented, ``_current_cap`` is left
+        unchanged so the next phase entry retries, and the caller learns
+        via the False return that the node still runs at its old cap."""
         if self._current_cap is not None and \
            caps_equal(cap, self._current_cap):
             return False
-        self.backend.apply(cap)
+        try:
+            self.backend.apply(cap)
+        except (OSError, RuntimeError):
+            self.apply_failures += 1
+            return False
+        cur = getattr(self.backend, "current_cap", None)
+        if cur is not None and not caps_equal(cur, cap):
+            self.apply_failures += 1  # swallowed downstream: write lost
+            return False
         self.transitions += 1
         self._current_cap = cap
         return True
@@ -314,7 +330,11 @@ class PowerManager:
             if task is not None:
                 eff = task if calls is None \
                     else dataclasses.replace(task, calls=calls)
-                m = self.backend.measure(eff, cap)
+                try:
+                    m = self.backend.measure(eff, cap)
+                except (OSError, RuntimeError):
+                    m = None  # transient telemetry failure: skip observe
+
             if m is not None:
                 rec.modeled = m
                 self.modeled_energy_j += m.energy
@@ -352,7 +372,10 @@ class PowerManager:
 
     # -- modeled per-step accounting (the energy-ledger duties) ------------
     def _measure(self, task: Task, cap: float) -> TaskMeasurement:
-        m = self.backend.measure(task, cap)
+        try:
+            m = self.backend.measure(task, cap)
+        except (OSError, RuntimeError):
+            m = None
         if m is None:  # write-only backend: fall back to the table
             try:
                 m = self.table.at(task.name, cap)

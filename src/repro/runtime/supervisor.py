@@ -68,6 +68,18 @@ class StragglerWatchdog:
         return slow
 
 
+def _jitter_unit(seed: int, n: int) -> float:
+    """Deterministic hash of (seed, n) to [0, 1) — stable across processes
+    (``hash`` is salted) and free of shared-RNG ordering hazards.  Kept
+    in-module: the runtime layer sits below ``repro.power``, which carries
+    the same mix for its backends."""
+    x = (seed * 0x9E3779B1 + n * 0x85EBCA6B + 0x27D4EB2F) & 0xFFFFFFFF
+    x ^= x >> 15
+    x = (x * 0x2C1B3C6D) & 0xFFFFFFFF
+    x ^= x >> 12
+    return x / 2 ** 32
+
+
 @dataclasses.dataclass
 class Supervisor:
     """Restart-from-checkpoint loop around a train function.
@@ -81,6 +93,12 @@ class Supervisor:
     backoff_s: float = 0.1
     restarts: int = 0
     history: list = dataclasses.field(default_factory=list)
+    #: jitter > 0 spreads simultaneous restarts apart: the delay is
+    #: multiplied by 1 + jitter * u where u in [0, 1) is a deterministic
+    #: hash of (seed, restart count) — same seed, same sequence, but two
+    #: jobs crashed by the same fault stop retrying in lockstep.
+    jitter: float = 0.0
+    seed: int = 0
 
     def _record_restart(self, kind: str, info) -> float:
         """Shared restart bookkeeping: append the event, enforce the
@@ -91,7 +109,11 @@ class Supervisor:
             raise RuntimeError(
                 f"exceeded max_restarts={self.max_restarts}: "
                 f"{self.history}")
-        return self.backoff_s * 2 ** (self.restarts - 1)
+        delay = self.backoff_s * 2 ** (self.restarts - 1)
+        if self.jitter:
+            delay *= 1.0 + self.jitter * _jitter_unit(self.seed,
+                                                      self.restarts)
+        return delay
 
     def run(self, train_fn: Callable[[int], str]) -> str:
         while True:

@@ -523,6 +523,53 @@ class ServeEngine:
         self._cache = None
         return snaps
 
+    def checkpoint(self) -> list[SlotSnapshot]:
+        """Shadow-checkpoint the WHOLE stream non-destructively: every
+        in-flight slot is exported as a warm ``SlotSnapshot`` (same two
+        stacked host syncs as a drain), every awaiting-restore or queued
+        request as its current snapshot/cold form — but nothing is
+        released and decoding continues untouched.  Requests are CLONED
+        into the snapshots, so later decode on the live stream cannot
+        mutate the checkpoint: ``restore``-ing it (typically on another
+        node, after a crash) replays from exactly this boundary,
+        bit-identically under greedy decoding."""
+        sched = getattr(self, "_sched", None)
+        if sched is None:
+            return []
+        snaps: list[SlotSnapshot] = []
+        active = sched.active()
+        if active:
+            cur, index, rem = self._fetch(
+                (self._cur, self._index, self._rem))
+            payloads = self._fetch([
+                lm.export_slot(self.cfg, self._cache, slot.sid,
+                               int(index[slot.sid]),
+                               quantize=self.snapshot_int8)
+                for slot in active])
+            self.sync_count += 2
+            for slot, payload in zip(active, payloads):
+                snaps.append(SlotSnapshot(
+                    request=slot.request.clone(), rem=int(rem[slot.sid]),
+                    kv_len=int(index[slot.sid]), cur=int(cur[slot.sid]),
+                    payload=payload))
+        for s in self._restore_q:
+            snaps.append(SlotSnapshot(
+                request=s.request.clone(), rem=s.rem, kv_len=s.kv_len,
+                cur=s.cur, payload=s.payload))
+        snaps.extend(SlotSnapshot(request=req.clone(),
+                                  rem=req.max_new_tokens)
+                     for req in sched.queue)
+        return snaps
+
+    def abandon(self) -> None:
+        """Crash path: tear the stream down WITHOUT exporting anything —
+        the device is gone, there is nothing to drain.  In-flight work
+        not covered by an earlier ``checkpoint`` is lost; the engine is
+        left idle and can be restarted with ``start``/``restore``."""
+        self._sched = None
+        self._cache = None
+        self._restore_q.clear()
+
     def restore(self, snaps: list[SlotSnapshot]) -> None:
         """Admit drained snapshots into this engine's stream (started on
         demand).  Warm snapshots re-install their cache lane and resume

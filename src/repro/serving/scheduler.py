@@ -33,6 +33,13 @@ class Request:
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
 
+    def clone(self) -> "Request":
+        """Deep-enough copy for checkpointing: token lists are owned by
+        the clone, so later decode on the live request cannot mutate a
+        shadow snapshot taken earlier."""
+        return Request(self.uid, list(self.prompt), self.max_new_tokens,
+                       list(self.generated))
+
 
 @dataclasses.dataclass
 class Slot:

@@ -150,8 +150,11 @@ def test_writeonly_backend_without_table_raises_clear_error():
 def test_hwmon_backend_gated(tmp_path):
     b = HwmonBackend(node=str(tmp_path / "missing" / "power1_cap"))
     assert not b.available()
-    with pytest.raises(RuntimeError, match="not writable"):
-        b.apply(200.0)
+    # a failed sysfs write degrades (counted, no-op) instead of killing
+    # the phase that issued the cap
+    b.apply(200.0)
+    assert b.errors == 1
+    assert b.current_cap is None
     assert b.measure(Task("t", flops=1.0, hbm_bytes=1.0), 200.0) is None
     # with a writable node it writes microwatts
     node = tmp_path / "power1_cap"
