@@ -46,11 +46,13 @@ import argparse
 import dataclasses
 import json
 
-from benchmarks.common import emit
+from benchmarks.common import bench_meta, emit
 from repro.configs.registry import get_model_config
 from repro.fleet import FaultInjector, ServeJob, SimulatedCluster, \
     chaos_schedule
 from repro.hw.tpu import DEFAULT_SUPERCHIP
+from repro.obs import (EnergyLedger, Tracer, dump_chrome_trace,
+                       dump_metrics_jsonl)
 from repro.workload import SLOTracker, WorkloadDriver, diurnal_trace
 
 #: Serve-token value in the fleet objective.
@@ -83,7 +85,8 @@ def _attainment(counters: dict) -> float:
 
 
 def _run_arm(trace, schedule, n_nodes: int, n_jobs: int, duration: float,
-             seed: int, *, watchdog: bool, ckpt: bool) -> dict:
+             seed: int, *, watchdog: bool, ckpt: bool,
+             tracer=None) -> dict:
     cfg = get_model_config("llama3.2-3b")
     injector = (FaultInjector(list(schedule), repair_s=REPAIR_S, seed=seed)
                 if schedule is not None else None)
@@ -91,7 +94,7 @@ def _run_arm(trace, schedule, n_nodes: int, n_jobs: int, duration: float,
         n_nodes=n_nodes, cabinet_size=4, policy="sensitivity",
         faults=injector,
         watchdog_deadline_s=WATCHDOG_S if watchdog else None,
-        shadow_ckpt_s=CKPT_S if ckpt else None)
+        shadow_ckpt_s=CKPT_S if ckpt else None, tracer=tracer)
     tracker = SLOTracker(sink=cluster.telemetry)
     driver = WorkloadDriver(list(trace), tracker)
     jobs = [ServeJob(f"svc-{i}", cfg, batch=8, prompt=256, new_tokens=64,
@@ -102,6 +105,10 @@ def _run_arm(trace, schedule, n_nodes: int, n_jobs: int, duration: float,
     budget = 0.75 * n_nodes * DEFAULT_SUPERCHIP.p_max
     counters = cluster.run(jobs=jobs, budget=budget, until_s=duration,
                            workload=driver)
+    if tracer is not None:
+        # exported chaos traces must balance the books: every attributed
+        # joule either landed in telemetry or is a recorded sample loss
+        EnergyLedger(tracer).assert_conserved(counters["energy_j"])
     useful = sum(j.emitted for j in jobs)
     energy = counters["energy_j"] + counters["idle_energy_j"]
     return {
@@ -115,7 +122,9 @@ def _run_arm(trace, schedule, n_nodes: int, n_jobs: int, duration: float,
 
 def run(n_nodes: int = 5, duration: float = 120.0, seed: int = 0,
         base_rps: float = 12.0, min_recovery: float | None = None,
-        json_path: str = "BENCH_chaos.json") -> dict:
+        json_path: str = "BENCH_chaos.json",
+        trace_out: str | None = None,
+        metrics_out: str | None = None) -> dict:
     n_jobs = n_nodes - 1                       # one spare for adoption
     trace = _make_trace(seed, duration, base_rps)
     # faults target only the job-bearing nodes (the spare exists to
@@ -138,9 +147,17 @@ def run(n_nodes: int = 5, duration: float = 120.0, seed: int = 0,
     }
     # the determinism contract: an identical-seed replay of the full
     # recovery stack — fault delivery, watchdog verdicts, checkpoint
-    # replay, SLO accounting — must be bit-identical
+    # replay, SLO accounting — must be bit-identical.  The replay arm
+    # carries the exported trace when one was asked for (tracing is
+    # observation-only, so the arms still compare equal).
+    tracer = Tracer() if (trace_out or metrics_out) else None
     ckpt2 = _run_arm(trace, schedule, n_nodes, n_jobs, duration, seed,
-                     watchdog=True, ckpt=True)
+                     watchdog=True, ckpt=True, tracer=tracer)
+    if trace_out:
+        dump_chrome_trace(tracer, trace_out, process_name="chaos-fleet")
+        emit("chaos_trace_spans", 0.0, str(len(tracer.spans)))
+    if metrics_out:
+        dump_metrics_jsonl(tracer, metrics_out)
 
     lost_to_faults = (arms["nofault"]["useful_tokens"]
                       - arms["none"]["useful_tokens"])
@@ -160,6 +177,7 @@ def run(n_nodes: int = 5, duration: float = 120.0, seed: int = 0,
             "fault_schedule": [dataclasses.asdict(e) for e in schedule],
         },
     }
+    results["meta"] = bench_meta(seed=seed, config=results["scenario"])
     with open(json_path, "w") as f:
         json.dump(results, f, indent=1)
 
@@ -228,10 +246,17 @@ def main() -> None:
                          "useful tokens the no-recovery arm lost (CI "
                          "smoke)")
     ap.add_argument("--json-path", default="BENCH_chaos.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto/Chrome trace_event JSON of the "
+                         "ckpt replay arm to this path")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the per-quantum counter stream of the "
+                         "ckpt replay arm to this path as JSONL")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(args.nodes, args.duration, args.seed, args.base_rps,
-        args.min_recovery, args.json_path)
+        args.min_recovery, args.json_path,
+        trace_out=args.trace_out, metrics_out=args.metrics_out)
 
 
 if __name__ == "__main__":

@@ -1,13 +1,51 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing + CSV emission + result metadata.
 
 Every benchmark prints ``name,us_per_call,derived`` rows: us_per_call is the
 wall time of the (repeated) computation; derived is the headline number the
-paper artifact reports.
+paper artifact reports.  Benchmarks that additionally write a
+``BENCH_*.json`` artifact stamp it with ``bench_meta()`` so any archived
+result is traceable to the schema, seed, scenario config and commit that
+produced it.
 """
 
 from __future__ import annotations
 
+import os
+import subprocess
 import time
+
+#: Version of the shared ``meta`` block every ``BENCH_*.json`` carries.
+#: Bump when the meta layout (not the benchmark payloads) changes.
+BENCH_SCHEMA_VERSION = 1
+
+#: The repo's tier-1 gate — recorded so an archived artifact names the
+#: test bar its commit was held to.
+TIER1_CMD = "PYTHONPATH=src python -m pytest -x -q"
+
+
+def git_commit() -> str | None:
+    """Commit hash of the repo this benchmark ran from (None outside a
+    checkout — e.g. an unpacked artifact tarball)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    return out.stdout.strip() if out.returncode == 0 else None
+
+
+def bench_meta(seed=None, config: dict | None = None) -> dict:
+    """The shared ``meta`` block stamped into every ``BENCH_*.json``:
+    schema version, the run's seed, the scenario config knobs, and the
+    commit + tier-1 command the artifact is traceable to."""
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "seed": seed,
+        "config": dict(config or {}),
+        "commit": git_commit(),
+        "tier1": TIER1_CMD,
+    }
 
 
 def timed(fn, repeats: int = 5):

@@ -33,7 +33,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks.common import emit
+from benchmarks.common import bench_meta, emit
 from repro.configs.registry import get_model_config
 from repro.fleet import ServeJob, SimulatedCluster, TrainJob
 from repro.hw.tpu import DEFAULT_SUPERCHIP
@@ -109,6 +109,7 @@ def run(n_nodes: int = 6, duration: float = 60.0,
         "job_shapes": ["train-llama", "serve-decode", "serve-prefill",
                        "train-mamba"],
     }
+    results["meta"] = bench_meta(config=results["scenario"])
     with open(json_path, "w") as f:
         json.dump(results, f, indent=1)
 

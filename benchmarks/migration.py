@@ -56,7 +56,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks.common import emit
+from benchmarks.common import bench_meta, emit
 from repro.configs.registry import get_model_config
 from repro.fleet import ServeJob, SimulatedCluster, TrainJob
 from repro.fleet.cluster import USEFUL_MARGIN_W
@@ -196,6 +196,7 @@ def run(n_nodes: int = 4, duration: float = 40.0,
         "train_backoff_s": TRAIN_BACKOFF_S,
         "budget_trace_w": [[t, w] for t, w in trace],
     }
+    results["meta"] = bench_meta(config=results["scenario"])
     with open(json_path, "w") as f:
         json.dump(results, f, indent=1)
 

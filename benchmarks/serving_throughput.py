@@ -27,7 +27,7 @@ import time
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import bench_meta, emit
 from repro.configs.base import reduced
 from repro.configs.registry import get_model_config, get_run_config
 from repro.models import lm
@@ -126,6 +126,7 @@ def run(n_requests: int = 24, min_speedup: float | None = None,
     results["scenario"] = {"arch": ARCH, "requests": n_requests,
                            "batch": BATCH, "max_seq": MAX_SEQ,
                            "decode_chunk": DECODE_CHUNK}
+    results["meta"] = bench_meta(config=results["scenario"])
     with open(json_path, "w") as f:
         json.dump(results, f, indent=1)
     for kind in ("continuous", "legacy"):

@@ -43,7 +43,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks.common import emit
+from benchmarks.common import bench_meta, emit
 from repro.configs.registry import get_model_config
 from repro.fleet import ServeJob, SimulatedCluster
 from repro.hw.tpu import DEFAULT_SUPERCHIP
@@ -131,6 +131,7 @@ def run(n_nodes: int = 4, duration: float = 120.0, seed: int = 0,
             "serve_value": SERVE_VALUE,
         },
     }
+    results["meta"] = bench_meta(seed=seed, config=results["scenario"])
     with open(json_path, "w") as f:
         json.dump(results, f, indent=1)
 

@@ -29,6 +29,7 @@ from repro.fleet.controller import FleetPowerController
 from repro.fleet.scheduler import FleetScheduler, Job
 from repro.fleet.telemetry import FleetTelemetry, NodeSample
 from repro.hw.tpu import DEFAULT_SUPERCHIP, SuperchipSpec
+from repro.obs.tracer import NULL_TRACER
 from repro.power.backends import SimulatedBackend
 from repro.power.manager import PowerManager
 
@@ -90,6 +91,7 @@ class FleetNode:
         self.spec = spec
         self.metric = metric
         self.backend = SimulatedBackend(spec)
+        self.tracer = NULL_TRACER      # cluster wires a live Tracer in
         self.pm: PowerManager | None = None
         self.job: Job | None = None
         self.grant_w = 0.0
@@ -275,12 +277,20 @@ class FleetNode:
         t0 = self.local_t
         tokens = steps = violations = 0
         energy = 0.0
+        tr = self.tracer if self.tracer.enabled else None
         while not self.job.done and self.local_t < until:
             step_s = step_j = 0.0
             for name, weight in self.job.step_phases():
                 fails0 = getattr(self.pm, "apply_failures", 0)
                 cap = self.pm.next_cap(name)
                 if self.pm.apply_cap(cap):   # a real write: pay for it
+                    if tr is not None:
+                        tr.instant(
+                            "cap_write", self.local_t + step_s, self.name,
+                            cat="power", args={
+                                "cap_w": cap,
+                                "energy_j": self.backend.transition_energy_j,
+                                "seconds": self.backend.transition_seconds})
                     step_s += self.backend.transition_seconds
                     step_j += self.backend.transition_energy_j
                 eff = cap
@@ -293,13 +303,24 @@ class FleetNode:
                 m = self.backend.measure(self._tasks[name], eff)
                 self.pm.observe(name, m.runtime, m.energy, cap=eff,
                                 clock_fraction=m.clock_fraction)
-                step_s += m.runtime * weight * self.slow_factor
-                step_j += m.energy * weight * self.slow_factor
+                phase_s = m.runtime * weight * self.slow_factor
+                phase_j = m.energy * weight * self.slow_factor
+                if tr is not None:
+                    t_phase = self.local_t + step_s
+                    tr.span(name, t_phase, t_phase + phase_s, self.name,
+                            cat="phase", args={
+                                "energy_j": phase_j, "cap_w": eff,
+                                "job": self.job.name})
+                step_s += phase_s
+                step_j += phase_j
                 # physical over-budget: an unattainable cap pins the chip
                 # at f_min and the draw exceeds what was granted (a stuck
                 # cap above the grant lands here too)
                 if m.avg_power > self.grant_w + 1.0:
                     violations += 1
+            if tr is not None:
+                tr.span("job.step", self.local_t, self.local_t + step_s,
+                        self.name, cat="step", args={"job": self.job.name})
             tokens += self.job.advance(step_s, now=self.local_t + step_s)
             steps += 1
             energy += step_j
@@ -307,6 +328,10 @@ class FleetNode:
         self.last_beat = self.local_t
         if steps == 0:
             return None
+        if tr is not None:
+            tr.span("node.grant", t0, self.local_t, self.name, cat="grant",
+                    args={"grant_w": self.grant_w, "job": self.job.name,
+                          "steps": steps, "tokens": tokens})
         return NodeSample(
             t=t0, node=self.name, cabinet=self.cabinet,
             job=self.job.name, kind=self.job.kind, grant_w=self.grant_w,
@@ -350,7 +375,7 @@ class SimulatedCluster:
                  cross_cabinet_bw: float | None = None,
                  idle_w: float = 0.0, wake_latency_s: float = 2.0,
                  faults=None, watchdog_deadline_s: float | None = None,
-                 shadow_ckpt_s: float | None = None):
+                 shadow_ckpt_s: float | None = None, tracer=None):
         if n_nodes < 1:
             raise ValueError("need at least one node")
         self.spec = spec
@@ -372,14 +397,18 @@ class SimulatedCluster:
                                 else spec.chip.ici_bandwidth)
         self.cross_cabinet_bw = (cross_cabinet_bw if cross_cabinet_bw
                                  else self.interconnect_bw / 4.0)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.nodes = [
             FleetNode(name=f"cab{i // cabinet_size}/n{i:02d}",
                       cabinet=f"cab{i // cabinet_size}", spec=spec,
                       metric=metric)
             for i in range(n_nodes)]
+        for node in self.nodes:
+            node.tracer = self.tracer
         self._cabinet_of = {n.name: n.cabinet for n in self.nodes}
         self.clock = VirtualClock()
         self.controller = FleetPowerController(policy=policy)
+        self.controller.tracer = self.tracer
         self.telemetry = FleetTelemetry()
         self.scheduler: FleetScheduler | None = None
         self.allocations: list = []
@@ -483,13 +512,23 @@ class SimulatedCluster:
             margin_w=self.useful_margin_w,
             watchdog_deadline_s=self.watchdog_deadline_s)
         self.scheduler = sched
+        tr = self.tracer if self.tracer.enabled else None
         while self.clock.now < until_s:
             now = self.clock.now
             budget_w = trace.at(now)
+            if tr is not None:
+                tr.span("fleet.quantum", now, now + self.quantum_s,
+                        "fleet", cat="quantum", args={"budget_w": budget_w})
 
             # 0. fault injection delivers due events / repairs idle nodes
             if self.faults is not None:
-                self.faults.on_quantum(self, now)
+                fired = self.faults.on_quantum(self, now)
+                if tr is not None and fired:
+                    for ev in fired:
+                        tr.instant(
+                            f"fault.{ev.kind}", now, ev.node, cat="fault",
+                            args={"mode": ev.mode,
+                                  "duration_s": ev.duration_s})
 
             # 1. harvest finished jobs -> free their nodes (and watts);
             #    a crashed node is unreachable — nothing to harvest from
@@ -508,23 +547,50 @@ class SimulatedCluster:
             #    power-gating idle nodes is what returns these watts
             events = sched.tick(now, self,
                                 max(budget_w - self.idle_draw_w(), 0.0))
-            for _ in events["preempted"]:
+            for name in events["preempted"]:
                 self.telemetry.record_preemption()
+                if tr is not None:
+                    tr.instant("preempt", now, "fleet", cat="sched",
+                               args={"job": name})
             if events["dropped_tokens"]:
                 self.telemetry.record_drop(events["dropped_tokens"])
             if events["kept_tokens"]:
                 self.telemetry.record_kept(events["kept_tokens"])
             for m in events["migrations"]:
                 self.telemetry.record_migration(m["bytes"], m["seconds"])
+                if tr is not None:
+                    tr.instant("migration", now, m["to"], cat="sched",
+                               args={"from": m["from"], "bytes": m["bytes"],
+                                     "seconds": m["seconds"],
+                                     "job": m.get("job", "")})
             for p in events.get("partials", ()):
                 self.telemetry.record_partial(p["slots"], p["tokens"])
+                if tr is not None:
+                    tr.instant("partial_drain", now, "fleet", cat="sched",
+                               args={"job": p.get("job", ""),
+                                     "slots": p["slots"],
+                                     "tokens": p["tokens"]})
             for u in events.get("unparked", ()):
                 self.telemetry.record_unpark(u["slots"])
+                if tr is not None:
+                    tr.instant("unpark", now, "fleet", cat="sched",
+                               args={"job": u.get("job", ""),
+                                     "slots": u["slots"]})
             for a in events.get("adoptions", ()):
                 self.telemetry.record_adoption(a["slots"], a["tokens"],
                                                a["bytes"], a["seconds"])
+                if tr is not None:
+                    tr.instant("adoption", now, "fleet", cat="sched",
+                               args={"slots": a["slots"],
+                                     "tokens": a["tokens"],
+                                     "bytes": a["bytes"]})
             for rec in events.get("dead", ()):
                 self.telemetry.record_dead(rec["replayed"], rec["lost"])
+                if tr is not None:
+                    tr.instant("dead_declared", now, "fleet", cat="sched",
+                               args={"node": rec.get("node", ""),
+                                     "replayed": rec["replayed"],
+                                     "lost": rec["lost"]})
 
             busy = self.busy_nodes()
             if (not busy and not sched.has_work
@@ -567,7 +633,19 @@ class SimulatedCluster:
                     filtered = self.faults.filter_sample(sample, now)
                     if filtered is None:
                         self.telemetry.record_sample_dropped()
+                        if tr is not None:
+                            # the energy WAS burned; the ledger needs the
+                            # original joules to balance the books
+                            tr.instant("sample_lost", now, sample.node,
+                                       cat="telemetry",
+                                       args={"energy_j": sample.energy_j,
+                                             "mode": "stale"})
                         continue
+                    if filtered is not sample and tr is not None:
+                        tr.instant("sample_lost", now, sample.node,
+                                   cat="telemetry",
+                                   args={"energy_j": sample.energy_j,
+                                         "mode": "corrupt"})
                     sample = filtered
                 if sample is not None:
                     self.telemetry.record(sample)
@@ -592,11 +670,23 @@ class SimulatedCluster:
                     if nbytes > 0:
                         node.local_t += nbytes / self.interconnect_bw
                         self.telemetry.record_checkpoint(int(nbytes))
+                        if tr is not None:
+                            tr.instant("checkpoint", t_end, node.name,
+                                       cat="ckpt", args={"bytes": int(nbytes)})
             if self.idle_w > 0:
                 n_idle = len(self.idle_nodes())
                 if n_idle:
                     self.telemetry.record_idle(
                         self.idle_w * n_idle * self.quantum_s)
+            if tr is not None:
+                tr.counter("fleet", now + self.quantum_s, {
+                    "energy_j": self.telemetry.energy_j,
+                    "tokens": self.telemetry.tokens,
+                    "busy_nodes": len(busy),
+                    "budget_w": budget_w,
+                    "violations": self.telemetry.violations,
+                    "preemptions": self.telemetry.preemptions,
+                })
             self.clock.advance(self.quantum_s)
         # harvest jobs that finished during the final quantum — the loop
         # exit must not leave their completion unrecorded / node busy

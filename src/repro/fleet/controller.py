@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.obs.tracer import NULL_TRACER
 from repro.power.arbiter import weighted_split
 
 #: Watts moved per refinement transfer, and the cap on transfer rounds
@@ -103,6 +104,7 @@ class FleetPowerController:
         self.policy = policy
         self.transfer_w = transfer_w
         self.rounds_per_node = rounds_per_node
+        self.tracer = NULL_TRACER    # the cluster wires a live Tracer in
         self.allocations = 0
         # degraded mode: last grant that was decided from TRUSTED telemetry,
         # per node — the hold value when a node's samples go stale
@@ -168,6 +170,14 @@ class FleetPowerController:
         for k, g in grants.items():
             if k not in pinned:
                 self._last_good[k] = g
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "redistribute", t, "fleet", cat="controller",
+                args={"budget_w": budget_w, "nodes": len(nodes),
+                      "degraded": len(pinned)})
+            self.tracer.counter(
+                "controller", t,
+                dict(sorted(grants.items()), budget_w=budget_w))
         return alloc
 
     # -- the middle level: facility -> cabinet budgets ---------------------

@@ -125,12 +125,15 @@ class FaultInjector:
 
     def attach(self, cluster) -> None:
         """Wrap every node's backend: injector faults under bounded retries."""
+        tracer = getattr(cluster, "tracer", None)
         for node in cluster.nodes:
             flaky = FlakyBackend(inner=node.backend, injector=self,
                                  node=node.name)
             node.backend = RetryingBackend(
                 inner=flaky, max_retries=self.cap_retries,
-                seed=_node_seed(self.seed, node.name))
+                seed=_node_seed(self.seed, node.name),
+                tracer=tracer, trace_track=node.name,
+                now_fn=lambda inj=self: inj.now)
             if node.pm is not None:   # mid-run attach: live session too
                 node.pm.backend = node.backend
 

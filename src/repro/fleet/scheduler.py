@@ -390,7 +390,7 @@ class ServeJob:
         self.request_latencies.append(latency)
         if self.slo is not None:
             self.slo.complete(ev.slo, latency, ev.output_len,
-                              ev.deadline_s)
+                              ev.deadline_s, now=now)
 
     # -- cross-job stream adoption ------------------------------------------
     @property

@@ -88,6 +88,9 @@ class FleetTelemetry:
         # per-SLO-class request counters (offered / rejected / completed /
         # met / goodput tokens), keyed by class name
         self.slo: dict[str, dict[str, int]] = {}
+        # latest windowed burn-rate snapshot (repro.obs.SLOBurnMonitor
+        # rows mirrored by the workload driver each quantum)
+        self.slo_burn: dict[str, dict[str, float]] = {}
         self.by_kind: dict[str, dict[str, float]] = {}
 
     # -- feeds -------------------------------------------------------------
@@ -229,6 +232,11 @@ class FleetTelemetry:
             c["met"] += 1
             c["goodput_tokens"] += tokens
 
+    def record_burn(self, snapshot: dict) -> None:
+        """Mirror the burn monitor's latest windowed scoreboard (read-only
+        observability — these rows never feed back into control here)."""
+        self.slo_burn = {k: dict(v) for k, v in sorted(snapshot.items())}
+
     # -- fleet-level view --------------------------------------------------
     def counters(self, elapsed_s: float | None = None) -> dict:
         """The fleet scoreboard.  ``elapsed_s`` (virtual) turns totals into
@@ -276,6 +284,8 @@ class FleetTelemetry:
             "j_per_token": (self.energy_j / self.tokens
                             if self.tokens else 0.0),
             "slo": {k: dict(v) for k, v in sorted(self.slo.items())},
+            "slo_burn": {k: dict(v)
+                         for k, v in sorted(self.slo_burn.items())},
             "by_kind": {k: dict(v) for k, v in sorted(self.by_kind.items())},
         }
         if elapsed_s is not None:

@@ -22,6 +22,16 @@ hangs, stuck/flaky cap writes, telemetry dropout/corruption, a
 straggler — ``docs/faults.md``); pair it with ``--watchdog-s`` to
 fence dead nodes and ``--ckpt-s`` for periodic shadow slot
 checkpoints that bound crash loss to one interval.
+
+``--trace-out PATH`` records the whole run on the ``repro.obs`` span
+ledger and writes a Perfetto/Chrome trace_event JSON (open it at
+ui.perfetto.dev); ``--metrics-out PATH`` streams the per-quantum
+counter snapshots as JSONL.  Same seed, same flags -> byte-identical
+files (``docs/observability.md``).  Under ``--workload diurnal`` the
+SLO scoreboard adds a per-class burn-rate column (error rate over the
+trailing window relative to the class error budget; >1 means the
+budget is burning) from the ``SLOBurnMonitor`` the autoscaler also
+reads.
 """
 
 from __future__ import annotations
@@ -134,6 +144,12 @@ def main() -> None:
     ap.add_argument("--repair-s", type=float, default=15.0,
                     help="virtual seconds a crashed node takes to repair "
                          "once fenced")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto/Chrome trace_event JSON of the "
+                         "run to this path (ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write per-quantum counter snapshots to this "
+                         "path as JSONL")
     args = ap.parse_args()
 
     p_max = args.nodes * DEFAULT_SUPERCHIP.p_max
@@ -153,6 +169,10 @@ def main() -> None:
                                   repair_s=args.repair_s)
         injector = FaultInjector(schedule, repair_s=args.repair_s,
                                  seed=args.chaos_seed)
+    tracer = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
     cluster = SimulatedCluster(
         n_nodes=args.nodes, cabinet_size=args.cabinet_size,
         metric=args.power_metric, policy=args.policy,
@@ -160,23 +180,27 @@ def main() -> None:
         cross_cabinet_bw=args.cross_cabinet_bw,
         idle_w=idle_w, wake_latency_s=args.wake_s,
         faults=injector, watchdog_deadline_s=args.watchdog_s,
-        shadow_ckpt_s=args.ckpt_s)
+        shadow_ckpt_s=args.ckpt_s, tracer=tracer)
 
     workload = None
     tracker = None
+    monitor = None
     if args.workload == "diurnal":
+        from repro.obs import SLOBurnMonitor
         from repro.workload import (AdmissionController, Autoscaler,
                                     SLOTracker, WorkloadDriver,
                                     diurnal_trace)
         cfg = get_model_config(args.arch)
-        tracker = SLOTracker(sink=cluster.telemetry)
+        monitor = SLOBurnMonitor()
+        tracker = SLOTracker(sink=cluster.telemetry, monitor=monitor)
         events = diurnal_trace(seed=args.workload_seed,
                                until_s=args.duration,
                                base_rps=args.base_rps)
         workload = WorkloadDriver(
             events, tracker,
             admission=AdmissionController() if args.autoscale else None,
-            autoscaler=Autoscaler() if args.autoscale else None)
+            autoscaler=Autoscaler(slo_monitor=monitor)
+            if args.autoscale else None)
         jobs = [ServeJob(f"svc-{i}", cfg, batch=8, prompt=256,
                          new_tokens=64, total_requests=0, decode_chunk=8,
                          open_loop=True, partial=True,
@@ -246,19 +270,45 @@ def main() -> None:
               f"idle {counters['idle_energy_j']:.0f} J, "
               f"{counters['sleeps']} sleeps / {counters['wakes']} wakes, "
               f"queue peak {counters['queue_depth_peak']}")
+        burn = monitor.snapshot() if monitor is not None else {}
         for name, s in sorted(tracker.summary().items()):
+            b = burn.get(name)
+            burn_col = (f", burn {b['burn']:.2f}x"
+                        f"{' BURNING' if b['burn'] > 1.0 else ''}"
+                        if b is not None else "")
             print(f"[slo:{name}] attainment {s['attainment']:.3f} "
                   f"({s['met']}/{s['completed']} met, "
                   f"{s['rejected']} rejected), "
                   f"p50 {s['p50_latency_s']:.2f}s / "
                   f"p99 {s['p99_latency_s']:.2f}s, "
-                  f"goodput {s['goodput_tokens']} tokens")
+                  f"goodput {s['goodput_tokens']} tokens{burn_col}")
     if cluster.allocations:
         last = cluster.allocations[-1]
         print("[grants] " + ", ".join(
             f"{k}={v:.0f}W" for k, v in sorted(last.node_w.items())))
         print("[cabinets] " + ", ".join(
             f"{k}={v:.0f}W" for k, v in sorted(last.cabinet_w.items())))
+    if tracer is not None:
+        from repro.obs import (EnergyLedger, dump_chrome_trace,
+                               dump_metrics_jsonl)
+        ledger = EnergyLedger(tracer)
+        ledger.assert_conserved(counters["energy_j"])
+        if args.trace_out:
+            dump_chrome_trace(tracer, args.trace_out,
+                              process_name="repro-fleet")
+            print(f"[obs] trace: {len(tracer.spans)} spans / "
+                  f"{len(tracer.instants)} instants -> {args.trace_out}")
+        if args.metrics_out:
+            dump_metrics_jsonl(tracer, args.metrics_out)
+            print(f"[obs] metrics: {len(tracer.counters)} snapshots -> "
+                  f"{args.metrics_out}")
+        s = ledger.summary()
+        n_nodes = sum(len(nodes) for nodes in ledger.rollup.values())
+        err = abs(ledger.conservation_error(counters["energy_j"]))
+        print(f"[obs] energy attribution: {s['attributed_j']:.0f} J over "
+              f"{n_nodes} tracks (transitions {s['transition_j']:.1f} J, "
+              f"lost samples {s['lost_j']:.1f} J) — conserved vs "
+              f"telemetry to {err:.2e} J")
 
 
 if __name__ == "__main__":

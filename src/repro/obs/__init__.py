@@ -1,0 +1,39 @@
+"""repro.obs: deterministic tracing, energy attribution, SLO burn rates.
+
+The observability layer the paper's Score-P power plug-ins played for
+one node, lifted across the whole stack:
+
+  * ``Tracer`` / ``NULL_TRACER`` — structured spans, instants and
+    counter snapshots on the virtual clock, deterministic ids, zero
+    cost when disabled (``repro.obs.tracer``);
+  * ``chrome_trace`` / ``dump_chrome_trace`` / ``dump_metrics_jsonl``
+    — Perfetto-openable trace_event JSON plus a JSONL metrics stream
+    (``repro.obs.export``);
+  * ``EnergyLedger`` / ``request_costs`` — joules and seconds joined
+    onto the span tree, facility→cabinet→node→phase rollup with a
+    conservation check against ``FleetTelemetry``, and per-request
+    queue-wait / prefill / decode / migration decomposition
+    (``repro.obs.ledger``);
+  * ``SLOBurnMonitor`` — windowed attainment / error-budget burn per
+    SLO class, the read-only signal the autoscaler and the launcher
+    scoreboard consume (``repro.obs.slo_monitor``).
+
+See ``docs/observability.md`` for the span taxonomy and how to open a
+trace in Perfetto.
+"""
+
+from repro.obs.export import (chrome_trace, dump_chrome_trace,
+                              dump_metrics_jsonl, metrics_jsonl)
+from repro.obs.ledger import EnergyLedger, RequestCost, request_costs
+from repro.obs.slo_monitor import SLOBurnMonitor
+from repro.obs.tracer import (NULL_TRACER, CounterSample, Instant,
+                              NullTracer, Span, Tracer)
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "Span", "Instant",
+    "CounterSample",
+    "chrome_trace", "dump_chrome_trace", "metrics_jsonl",
+    "dump_metrics_jsonl",
+    "EnergyLedger", "RequestCost", "request_costs",
+    "SLOBurnMonitor",
+]

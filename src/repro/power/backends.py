@@ -169,6 +169,11 @@ class RetryingBackend:
     Backoff is *accounted*, not slept, unless a ``sleep_fn`` is given:
     virtual-clock callers read ``backoff_total_s`` and charge it
     themselves.
+
+    ``tracer``/``trace_track``/``now_fn`` optionally emit a
+    ``cap_retry`` instant per retry and a ``cap_giveup`` instant per
+    exhausted budget (``now_fn`` supplies the virtual timestamp — the
+    fault injector wires it to its own clock).
     """
 
     inner: CapBackend
@@ -182,6 +187,16 @@ class RetryingBackend:
     failed_measures: int = 0
     backoff_total_s: float = 0.0
     current_cap: float | None = None
+    tracer: object = None
+    trace_track: str = "power"
+    now_fn: object = None
+
+    def _emit(self, name: str, args: dict) -> None:
+        tr = self.tracer
+        if tr is None or not tr.enabled:
+            return
+        t = self.now_fn() if self.now_fn is not None else 0.0
+        tr.instant(name, t, self.trace_track, cat="power", args=args)
 
     def apply(self, cap: float) -> None:
         for attempt in range(self.max_retries + 1):
@@ -192,12 +207,17 @@ class RetryingBackend:
             except (OSError, RuntimeError):
                 if attempt == self.max_retries:
                     self.failed_applies += 1
+                    self._emit("cap_giveup",
+                               {"cap_w": cap, "attempts": attempt + 1})
                     return  # fall back to last-known-good (current_cap)
                 self.retries += 1
                 delay = self.backoff_s * 2 ** attempt
                 delay *= 1.0 + self.jitter * jitter_unit(self.seed,
                                                          self.retries)
                 self.backoff_total_s += delay
+                self._emit("cap_retry",
+                           {"cap_w": cap, "attempt": attempt + 1,
+                            "backoff_s": delay})
                 if self.sleep_fn is not None:
                     self.sleep_fn(delay)
 

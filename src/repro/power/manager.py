@@ -29,6 +29,7 @@ from typing import Iterator
 
 from repro.core.tasks import (Task, TaskMeasurement, TaskTable, caps_equal)
 from repro.hw.tpu import DEFAULT_SUPERCHIP, SuperchipSpec
+from repro.obs.tracer import NULL_TRACER
 from repro.power.backends import (CapBackend, SimulatedBackend,
                                   TRANSITION_ENERGY_J, TRANSITION_SECONDS)
 from repro.power.metrics import Metric, get_metric, optimal_cap, rank_caps
@@ -125,6 +126,12 @@ class PowerManager:
                see ``set_grant``.
     history_limit:   PhaseRecords kept (tail); aggregate counters are
                unbounded.
+    tracer:    optional ``repro.obs.Tracer``: every landed cap write and
+               every modeled phase measurement is emitted as an instant /
+               span on track ``trace_track`` at the session's modeled
+               virtual time (``virtual_now``).  Default ``NULL_TRACER``
+               (zero cost).  Fleet nodes leave this off — the node's
+               ``run_quantum`` emits richer spans on the cluster clock.
     """
 
     def __init__(self, table: TaskTable | None = None, *,
@@ -139,8 +146,11 @@ class PowerManager:
                  ema_alpha: float = 0.5,
                  explore_every: int = 0,
                  cap_limit: float | None = None,
-                 history_limit: int = 1024):
+                 history_limit: int = 1024,
+                 tracer=None, trace_track: str = "power"):
         self.spec = spec
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.trace_track = trace_track
         self.backend = backend if backend is not None \
             else SimulatedBackend(spec)
         self.goal = goal if goal is not None else PowerGoal(metric=metric)
@@ -242,6 +252,14 @@ class PowerManager:
         return self.schedule
 
     # -- online session ----------------------------------------------------
+    @property
+    def virtual_now(self) -> float:
+        """The session's modeled virtual clock: accounted phase runtime
+        plus the transition time of every landed cap write — the
+        timebase standalone-session trace spans are stamped with."""
+        return (self.modeled_runtime_s
+                + self.transitions * self.backend.transition_seconds)
+
     def cap_for(self, phase: str) -> float:
         return self.schedule.cap_for(phase)
 
@@ -318,7 +336,13 @@ class PowerManager:
         task's canonical call count so chunk-scale samples never blend
         into rows measured at a different scale."""
         cap = self.next_cap(name)
-        self.apply_cap(cap)
+        tr = self.tracer if self.tracer.enabled else None
+        t_entry = self.virtual_now
+        if self.apply_cap(cap) and tr is not None:
+            tr.instant("cap_write", t_entry, self.trace_track, cat="power",
+                       args={"cap_w": cap,
+                             "energy_j": self.backend.transition_energy_j,
+                             "seconds": self.backend.transition_seconds})
         rec = PhaseRecord(name=name, cap=cap)
         t0 = time.perf_counter()
         try:
@@ -337,6 +361,11 @@ class PowerManager:
 
             if m is not None:
                 rec.modeled = m
+                if tr is not None:
+                    t0v = self.virtual_now
+                    tr.span(name, t0v, t0v + m.runtime, self.trace_track,
+                            cat="phase",
+                            args={"energy_j": m.energy, "cap_w": cap})
                 self.modeled_energy_j += m.energy
                 self.modeled_runtime_s += m.runtime
                 scale = 1.0 if calls in (None, 0) else task.calls / calls

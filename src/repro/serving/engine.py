@@ -42,6 +42,7 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.core.tasks import Task
 from repro.models import lm
 from repro.models.layers import Ctx
+from repro.obs.tracer import NULL_TRACER
 from repro.serving.scheduler import (Request, SlotScheduler, chunk_plan,
                                      fewest_remaining)
 
@@ -299,7 +300,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, run: RunConfig, ctx: Ctx, params,
                  batch_size: int = 4, max_seq: int = 256, power=None,
                  prefill_chunk: int = 32, decode_chunk: int = 8,
-                 snapshot_int8: bool = False, victim_policy=None):
+                 snapshot_int8: bool = False, victim_policy=None,
+                 tracer=None, trace_track: str = "engine"):
         if cfg.family == "audio":
             raise ValueError("encoder-only arch has no decode path")
         prefill_chunk = min(prefill_chunk, max_seq)
@@ -316,6 +318,13 @@ class ServeEngine:
         self.decode_chunk = decode_chunk
         self.snapshot_int8 = snapshot_int8
         self.victim_policy = victim_policy or fewest_remaining
+        # observability: spans/instants on a modeled virtual timebase
+        # (``_vt`` advances by the modeled chunk runtime when a power
+        # session is attached, by 1.0 per phase otherwise); default
+        # NULL_TRACER is zero-cost — see repro.obs / docs/observability.md
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.trace_track = trace_track
+        self._vt = 0.0
         # jit caches one program per (1, chunk_size) token shape — the
         # chunk_plan power-of-two sizes bound the trace count
         self._prefill_step = jax.jit(make_prefill_chunk_step(cfg, run, ctx))
@@ -400,6 +409,10 @@ class ServeEngine:
         self.finished = []
         self._ensure_stream()
         self._sched.submit(requests)
+        if self.tracer.enabled:
+            for req in requests:
+                self.tracer.instant("submit", self._vt, self.trace_track,
+                                    cat="serving", args={"uid": req.uid})
 
     def submit(self, requests: list[Request]) -> None:
         """Queue MORE requests onto the stream without resetting it —
@@ -415,6 +428,10 @@ class ServeEngine:
                     f"max_seq {self.max_seq}")
         self._ensure_stream()
         self._sched.submit(requests)
+        if self.tracer.enabled:
+            for req in requests:
+                self.tracer.instant("submit", self._vt, self.trace_track,
+                                    cat="serving", args={"uid": req.uid})
 
     @property
     def queue_depth(self) -> int:
@@ -584,13 +601,23 @@ class ServeEngine:
                     f"request {s.request.uid}: snapshot needs {need} cache "
                     f"rows but this engine holds max_seq {self.max_seq}")
         self._ensure_stream()
+        tr = self.tracer if self.tracer.enabled else None
         for s in snaps:
             if not s.warm:
                 self._sched.submit([s.request])
+                if tr is not None:
+                    tr.instant("submit", self._vt, self.trace_track,
+                               cat="serving", args={"uid": s.request.uid})
             elif s.rem <= 0:        # finished between export and restore
                 self.finished.append(s.request)
             else:
                 self._restore_q.append(s)
+                if tr is not None:
+                    tr.instant("restore", self._vt, self.trace_track,
+                               cat="serving",
+                               args={"uid": s.request.uid,
+                                     "bytes": s.payload_bytes,
+                                     "kv_len": s.kv_len})
 
     def _install_snapshot(self, snap: SlotSnapshot, sid: int) -> None:
         """Write a warm snapshot's cache lane into slot ``sid`` and arm
@@ -630,6 +657,8 @@ class ServeEngine:
         if not self.pending:
             return []
         sched = self._sched
+        tr = self.tracer if self.tracer.enabled else None
+        chunk_t0 = self._vt
         # restored slots first: their work is already paid for — a warm
         # snapshot install is a cache write, not a prefill program
         while self._restore_q:
@@ -641,18 +670,39 @@ class ServeEngine:
         # run under the prefill cap (back-to-back entries coalesce the
         # cap write; the modeled measurement accounts each prefill)
         for slot in sched.admit_ready():
-            with self._phase("prefill"):
+            with self._phase("prefill") as rec:
                 self._cache, logits = self._prefill_into_slot(
                     self._cache, slot.request, slot.sid)
             self._cur, self._index, self._rem, self._done = self._admit_fn(
                 self._cur, self._index, self._rem, self._done, logits,
                 slot.sid, len(slot.request.prompt),
                 slot.request.max_new_tokens)
-        with self._phase("decode", calls=self.decode_chunk):
+            if tr is not None:
+                m = getattr(rec, "modeled", None)
+                dt = m.runtime if m is not None else 1.0
+                tr.span("prefill", self._vt, self._vt + dt,
+                        self.trace_track, cat="phase",
+                        args={"uid": slot.request.uid,
+                              "energy_j": m.energy if m is not None
+                              else 0.0})
+                self._vt += dt
+        uids = [s.request.uid for s in sched.active()] \
+            if tr is not None else None
+        with self._phase("decode", calls=self.decode_chunk) as rec:
             (self._cache, self._cur, self._index, self._rem, self._done,
              out, _) = self._decode_fn(
                 self.params, self._cache, self._cur, self._index,
                 self._rem, self._done)
+        if tr is not None:
+            m = getattr(rec, "modeled", None)
+            dt = m.runtime if m is not None else 1.0
+            tr.span("decode", self._vt, self._vt + dt, self.trace_track,
+                    cat="phase",
+                    args={"uids": uids,
+                          "energy_j": m.energy if m is not None else 0.0})
+            self._vt += dt
+            tr.span("engine.chunk", chunk_t0, self._vt, self.trace_track,
+                    cat="chunk", args={"active": len(uids)})
         out_host = self._fetch(out)           # the chunk's ONE sync
         self.sync_count += 1
         now = time.perf_counter() - self._t0

@@ -76,6 +76,12 @@ class Autoscaler:
     min_running: int = 1        # serve nodes that never park
     wake_threshold: int = 8     # queued requests that trigger a node wake
     max_wakes_per_quantum: int = 1
+    # Optional[repro.obs.SLOBurnMonitor] (read-only): while any class
+    # burns error budget faster than its target allows (burn > 1.0),
+    # scale-down is vetoed and waking is forced even below the queue
+    # threshold — burn leads queue depth when latency (not backlog) is
+    # what is dying.  None preserves the legacy queue-only behavior.
+    slo_monitor: object | None = None
 
     def __post_init__(self):
         self._idle_since: dict[str, float] = {}
@@ -83,6 +89,8 @@ class Autoscaler:
     def control(self, driver: "WorkloadDriver", cluster, sched,
                 now: float) -> None:
         nodes = WorkloadDriver.serve_nodes(cluster)
+        burning = (self.slo_monitor.burning(now)
+                   if self.slo_monitor is not None else [])
 
         # -- per-job slot targets ------------------------------------------
         for n in nodes:
@@ -94,9 +102,11 @@ class Autoscaler:
                 self._idle_since.setdefault(job.name, now)
             target = max(self.min_slots, min(job.capacity, load))
             # grows go through the scheduler's regrow step (it owns the
-            # watt headroom); shrinks release margin immediately
+            # watt headroom); shrinks release margin immediately — unless
+            # error budget is burning, when shedding capacity is the one
+            # move guaranteed to make the burn worse
             job.slot_target = target
-            if (target < job.active_cap
+            if (not burning and target < job.active_cap
                     and load <= int(self.shrink_frac * job.active_cap)):
                 job.preempt(max_slots=target)
                 if hasattr(n, "refit"):
@@ -104,7 +114,7 @@ class Autoscaler:
 
         # -- park idle jobs, power-gate their nodes ------------------------
         running = list(nodes)
-        if not driver.backlog:
+        if not driver.backlog and not burning:
             for n in nodes:
                 if len(running) <= self.min_running:
                     break
@@ -116,10 +126,10 @@ class Autoscaler:
                     running.remove(n)
                     self._idle_since.pop(job_name, None)
 
-        # -- wake sleeping nodes under queue pressure ----------------------
+        # -- wake sleeping nodes under queue pressure (or budget burn) -----
         pressure = len(driver.backlog) \
             + sum(n.job.queue_depth for n in running)
-        if pressure >= self.wake_threshold:
+        if pressure >= self.wake_threshold or burning:
             sched.expedite(now)      # hibernated jobs become eligible NOW
             woken = 0
             for node in cluster.sleeping_nodes():
@@ -177,10 +187,10 @@ class WorkloadDriver:
         while self._trace and self._trace[0].t <= now:
             ev = self._trace.popleft()
             self.offered += 1
-            self.tracker.offer(ev.slo)
+            self.tracker.offer(ev.slo, now=now)
             if (self.admission is not None
                     and not self.admission.admit(ev, self.tracker)):
-                self.tracker.reject(ev.slo)
+                self.tracker.reject(ev.slo, now=now)
                 continue
             self.backlog.append(ev)
 
@@ -203,3 +213,6 @@ class WorkloadDriver:
         telemetry = getattr(cluster, "telemetry", None)
         if telemetry is not None:
             telemetry.record_queue_depth(self.queue_depth(cluster))
+            monitor = getattr(self.tracker, "monitor", None)
+            if monitor is not None:
+                telemetry.record_burn(monitor.snapshot(now))

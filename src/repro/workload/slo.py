@@ -82,26 +82,32 @@ class SLOTracker:
     """Per-class SLO scoreboard: offers, rejects, completions, deadline
     attainment, goodput.  Purely additive — order-independent."""
 
-    def __init__(self, sink=None):
+    def __init__(self, sink=None, monitor=None):
         self._stats: dict[str, _ClassStats] = {}
-        self.sink = sink    # Optional[FleetTelemetry]
+        self.sink = sink          # Optional[FleetTelemetry]
+        # Optional[repro.obs.SLOBurnMonitor]: resolved requests carrying
+        # a ``now=`` timestamp additionally feed the windowed burn-rate
+        # monitor (run-lifetime counters here, trailing window there)
+        self.monitor = monitor
 
     def _cls(self, name: str) -> _ClassStats:
         return self._stats.setdefault(name, _ClassStats())
 
     # -- feeds -------------------------------------------------------------
-    def offer(self, name: str) -> None:
+    def offer(self, name: str, now: float | None = None) -> None:
         self._cls(name).offered += 1
         if self.sink is not None:
             self.sink.record_slo_offer(name)
 
-    def reject(self, name: str) -> None:
+    def reject(self, name: str, now: float | None = None) -> None:
         self._cls(name).rejected += 1
         if self.sink is not None:
             self.sink.record_slo_reject(name)
+        if self.monitor is not None and now is not None:
+            self.monitor.resolve(name, met=False, t=now)
 
     def complete(self, name: str, latency_s: float, tokens: int,
-                 deadline_s: float) -> None:
+                 deadline_s: float, now: float | None = None) -> None:
         s = self._cls(name)
         met = latency_s <= deadline_s + 1e-9
         s.completed += 1
@@ -112,6 +118,8 @@ class SLOTracker:
             s.goodput_tokens += tokens
         if self.sink is not None:
             self.sink.record_slo_completion(name, met=met, tokens=tokens)
+        if self.monitor is not None and now is not None:
+            self.monitor.resolve(name, met=met, t=now)
 
     # -- reductions --------------------------------------------------------
     def outstanding(self, name: str) -> int:

@@ -1,0 +1,410 @@
+"""Observability tests: deterministic tracing, energy attribution, SLO
+burn-rate monitoring, and the Fig. 1 sampler's span-ledger re-expression.
+
+The acceptance contract, per layer:
+
+  * tracer — sequential deterministic ids, begin/end nesting with exact
+    parent links, and a ``NULL_TRACER`` default that records nothing;
+  * export — two same-seed chaos-on fleet runs emit BYTE-identical
+    Perfetto trace files and metrics streams, and the structural
+    validator (``tools/check_trace.py``) accepts what we export and
+    rejects what we corrupt;
+  * ledger — energy attributed over the span tree minus what telemetry
+    faults destroyed equals ``FleetTelemetry.energy_j`` to 1e-6
+    relative, and the serving-side ``request_costs`` decomposition
+    accounts every request and every modeled joule;
+  * burn monitor — trailing-window attainment, SRE burn math, window
+    pruning, worst-first ``burning`` order, and the autoscaler's
+    shrink veto;
+  * Fig. 1 — ``generate_trace`` on the span ledger is bit-identical to
+    the original direct sampling loop, jittered or not.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_model_config
+from repro.core.tasks import Task
+from repro.core.power_model import simulate_task
+from repro.core.trace import TracePoint, PowerTrace, generate_trace, \
+    phase_spans
+from repro.fleet import (FaultInjector, ServeJob, SimulatedCluster,
+                         chaos_schedule)
+from repro.hw.tpu import DEFAULT_SUPERCHIP
+from repro.models.lsms import scf_phase_sequence
+from repro.obs import (NULL_TRACER, EnergyLedger, SLOBurnMonitor, Tracer,
+                       chrome_trace, dump_chrome_trace, dump_metrics_jsonl,
+                       metrics_jsonl, request_costs)
+from repro.workload import SLOTracker, WorkloadDriver, diurnal_trace
+
+LLAMA = get_model_config("llama3.2-3b")
+N_PMAX = DEFAULT_SUPERCHIP.p_max
+
+CHECKER = Path(__file__).resolve().parent.parent / "tools" / "check_trace.py"
+
+
+# ===========================================================================
+# tracer core
+# ===========================================================================
+
+def test_tracer_ids_sequential_and_views():
+    tr = Tracer()
+    a = tr.span("alpha", 0.0, 1.0, "n0", cat="phase")
+    b = tr.instant("fault.crash", 0.5, "n0", cat="fault")
+    c = tr.counter("fleet", 1.0, {"tokens": 3})
+    assert (a, b, c) == (1, 2, 3)
+    assert [s.name for s in tr.spans_by_cat("phase")] == ["alpha"]
+    assert [e.id for e in tr.instants_by_name("fault.crash")] == [b]
+    assert tr.tracks() == ["fleet", "n0"]
+
+
+def test_tracer_begin_end_nesting_parent_links():
+    tr = Tracer()
+    outer = tr.begin("quantum", 0.0, "fleet")
+    inner = tr.begin("grant", 0.2, "fleet")
+    tr.end(inner, 0.8)
+    tr.end(outer, 1.0)
+    spans = {s.id: s for s in tr.spans}
+    assert spans[inner].args["parent"] == outer
+    assert spans[outer].t1 == 1.0 and spans[inner].t1 == 0.8
+    # different tracks do not nest into each other
+    tr.begin("grant", 0.0, "n0")
+    assert "parent" not in tr.spans[-1].args
+    with pytest.raises(KeyError):
+        tr.end(999, 1.0)
+
+
+def test_null_tracer_records_nothing():
+    assert NULL_TRACER.enabled is False
+    assert NULL_TRACER.span("x", 0.0, 1.0, "n0") == 0
+    assert NULL_TRACER.begin("x", 0.0, "n0") == 0
+    NULL_TRACER.end(0, 1.0)
+    assert NULL_TRACER.instant("x", 0.0, "n0") == 0
+    assert NULL_TRACER.counter("n0", 0.0, {"a": 1}) == 0
+    assert not NULL_TRACER.spans and not NULL_TRACER.instants \
+        and not NULL_TRACER.counters
+
+
+def test_cluster_default_tracer_is_null():
+    c = SimulatedCluster(n_nodes=2, cabinet_size=2)
+    assert c.tracer is NULL_TRACER
+    for node in c.nodes:
+        assert node.tracer is NULL_TRACER
+
+
+# ===========================================================================
+# fleet trace: determinism, structure, conservation
+# ===========================================================================
+
+def _traced_chaos_run(seed: int = 0):
+    """A small chaos-on fleet run with everything traced."""
+    names = [f"cab{i // 4}/n{i:02d}" for i in range(3)]
+    evs = chaos_schedule(seed, names, 40.0, crashes=1, hangs=0,
+                         cap_faults=1, telemetry_faults=1, stragglers=1,
+                         repair_s=8.0)
+    tracer = Tracer()
+    c = SimulatedCluster(
+        n_nodes=4, cabinet_size=4, faults=FaultInjector(evs, seed=seed),
+        watchdog_deadline_s=2.5, shadow_ckpt_s=3.0, tracer=tracer)
+    tracker = SLOTracker(sink=c.telemetry,
+                         monitor=SLOBurnMonitor(window_s=10.0))
+    driver = WorkloadDriver(
+        list(diurnal_trace(seed=seed, until_s=40.0, base_rps=4.0)),
+        tracker)
+    jobs = [ServeJob(f"s{i}", LLAMA, batch=8, prompt=256, new_tokens=64,
+                     total_requests=0, decode_chunk=8, open_loop=True,
+                     migrate=True, partial=True, max_restarts=16,
+                     backoff_jitter=0.25, slo=tracker)
+            for i in range(3)]
+    out = c.run(jobs, budget=4 * N_PMAX, until_s=40.0, workload=driver)
+    return tracer, out
+
+
+@pytest.fixture(scope="module")
+def chaos_trace():
+    # seed 1: a schedule whose telemetry fault actually destroys samples
+    # (seed 0's window lands where no sample is due), so the ledger's
+    # lost-energy accounting is exercised too
+    return _traced_chaos_run(seed=1)
+
+
+def test_same_seed_trace_exports_byte_identical(chaos_trace, tmp_path):
+    tracer1, _ = chaos_trace
+    tracer2, _ = _traced_chaos_run(seed=1)
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    dump_chrome_trace(tracer1, str(p1))
+    dump_chrome_trace(tracer2, str(p2))
+    assert p1.read_bytes() == p2.read_bytes()
+    assert metrics_jsonl(tracer1) == metrics_jsonl(tracer2)
+    # and a different seed genuinely changes the bytes
+    tracer3, _ = _traced_chaos_run(seed=2)
+    dump_chrome_trace(tracer3, str(p2))
+    assert p1.read_bytes() != p2.read_bytes()
+
+
+def test_trace_covers_the_taxonomy(chaos_trace):
+    tracer, out = chaos_trace
+    cats = {s.cat for s in tracer.spans}
+    assert {"quantum", "grant", "step", "phase"} <= cats
+    names = {e.name for e in tracer.instants}
+    assert "cap_write" in names
+    assert any(n.startswith("fault.") for n in names)
+    assert "checkpoint" in names and out["checkpoints"] >= 1
+    assert "sample_lost" in names       # telemetry faults fired
+    # per-quantum counter stream, one snapshot per control quantum
+    fleet_counters = [c for c in tracer.counters if c.track == "fleet"]
+    assert len(fleet_counters) == int(out["virtual_s"])
+    for c in fleet_counters:
+        assert {"energy_j", "tokens", "busy_nodes"} <= set(c.values)
+
+
+def test_energy_attribution_conserves(chaos_trace):
+    tracer, out = chaos_trace
+    ledger = EnergyLedger(tracer)
+    err = abs(ledger.conservation_error(out["energy_j"]))
+    assert err <= 1e-6 * max(1.0, out["energy_j"])
+    ledger.assert_conserved(out["energy_j"])
+    # the chaos run destroyed samples — attribution explains them too
+    assert ledger.lost_j > 0.0
+    assert out["dropped_samples"] + out["corrupt_samples"] >= 1
+    # rollup shape: cabinets hold nodes hold phases
+    assert ledger.rollup
+    total = sum(ledger.cabinet_j(c) for c in ledger.rollup)
+    assert total == pytest.approx(ledger.attributed_j)
+    phases = ledger.phase_j()
+    assert phases and all(v >= 0.0 for v in phases.values())
+    # and a wrong counter is loudly rejected
+    with pytest.raises(AssertionError):
+        ledger.assert_conserved(out["energy_j"] * 0.5)
+
+
+def test_chrome_trace_structure(chaos_trace):
+    tracer, _ = chaos_trace
+    doc = chrome_trace(tracer)
+    events = doc["traceEvents"]
+    by_ph = {}
+    for ev in events:
+        by_ph.setdefault(ev["ph"], []).append(ev)
+    assert len(by_ph["X"]) == len(tracer.spans)
+    assert len(by_ph["i"]) == len(tracer.instants)
+    assert len(by_ph["C"]) == len(tracer.counters)
+    # per-tid timestamps non-decreasing, durations non-negative
+    last = {}
+    for ev in events:
+        if ev["ph"] == "M":
+            continue
+        assert ev["ts"] >= last.get(ev["tid"], float("-inf"))
+        last[ev["tid"]] = ev["ts"]
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+
+
+def test_check_trace_validator(chaos_trace, tmp_path):
+    tracer, _ = chaos_trace
+    good = tmp_path / "good.json"
+    dump_chrome_trace(tracer, str(good))
+    ok = subprocess.run([sys.executable, str(CHECKER), str(good)],
+                        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stderr
+    # corrupt it: negative duration must be rejected
+    doc = json.loads(good.read_text())
+    for ev in doc["traceEvents"]:
+        if ev["ph"] == "X":
+            ev["dur"] = -1.0
+            break
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(doc))
+    rej = subprocess.run([sys.executable, str(CHECKER), str(bad)],
+                         capture_output=True, text=True)
+    assert rej.returncode != 0
+    assert "negative dur" in rej.stderr
+
+
+def test_metrics_jsonl_parses_and_is_chronological(chaos_trace, tmp_path):
+    tracer, _ = chaos_trace
+    path = tmp_path / "metrics.jsonl"
+    dump_metrics_jsonl(tracer, str(path))
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    assert rows
+    assert all({"t", "track"} <= set(r) for r in rows)
+    assert [r["t"] for r in rows] == sorted(r["t"] for r in rows)
+
+
+def test_burn_snapshot_mirrors_into_telemetry(chaos_trace):
+    _, out = chaos_trace
+    assert out["slo_burn"]          # WorkloadDriver mirrored the monitor
+    for row in out["slo_burn"].values():
+        assert {"attainment", "burn", "resolved", "target"} == set(row)
+
+
+# ===========================================================================
+# SLO burn monitor
+# ===========================================================================
+
+def test_burn_monitor_math_and_pruning():
+    m = SLOBurnMonitor(window_s=10.0, targets={"interactive": 0.9})
+    assert m.attainment("interactive") == 1.0      # empty window
+    for t in range(8):
+        m.resolve("interactive", met=True, t=float(t))
+    m.resolve("interactive", met=False, t=8.0)
+    m.resolve("interactive", met=False, t=9.0)
+    assert m.attainment("interactive", now=9.0) == pytest.approx(0.8)
+    # 20% windowed errors against a 10% budget: burn 2x
+    assert m.burn_rate("interactive", now=9.0) == pytest.approx(2.0)
+    # the window slides: by t=18 only the two misses remain, then none
+    assert m.attainment("interactive", now=18.0) == pytest.approx(0.0)
+    assert m.attainment("interactive", now=30.0) == 1.0
+    assert m.burn_rate("interactive", now=30.0) == 0.0
+
+
+def test_burn_monitor_burning_order_and_snapshot():
+    m = SLOBurnMonitor(window_s=100.0)      # default 0.95 target
+    for _ in range(2):
+        m.resolve("batch", met=False, t=1.0)
+        m.resolve("batch", met=True, t=1.0)
+    for _ in range(4):
+        m.resolve("interactive", met=False, t=1.0)
+    m.resolve("standard", met=True, t=1.0)
+    # interactive burns 100%/5% = 20x, batch 50%/5% = 10x, standard 0
+    assert m.burning(now=1.0) == ["interactive", "batch"]
+    snap = m.snapshot(now=1.0)
+    assert list(snap) == ["batch", "interactive", "standard"]
+    assert snap["interactive"]["burn"] == pytest.approx(20.0)
+    assert snap["batch"]["burn"] == pytest.approx(10.0)
+    assert snap["standard"]["burn"] == 0.0
+    assert snap["batch"]["resolved"] == 4
+
+
+def test_burn_monitor_rejects_bad_window():
+    with pytest.raises(ValueError):
+        SLOBurnMonitor(window_s=0.0)
+
+
+def test_slo_tracker_feeds_monitor():
+    m = SLOBurnMonitor(window_s=50.0)
+    tracker = SLOTracker(monitor=m)
+    tracker.offer("interactive", now=1.0)
+    tracker.reject("interactive", now=1.0)         # a miss
+    tracker.offer("interactive", now=2.0)
+    tracker.complete("interactive", latency_s=0.1, tokens=8,
+                     deadline_s=1.0, now=2.0)
+    snap = m.snapshot(now=2.0)
+    assert snap["interactive"]["resolved"] == 2
+    assert snap["interactive"]["attainment"] == pytest.approx(0.5)
+
+
+# ===========================================================================
+# Fig. 1 re-expression on the span ledger
+# ===========================================================================
+
+def _legacy_generate(phases, cap, spec=DEFAULT_SUPERCHIP, sample_ms=5.0,
+                     jitter_sigma=0.0, seed=0):
+    """The pre-``repro.obs`` direct sampling loop, verbatim — the
+    bit-identity oracle for the span-ledger path."""
+    rng = np.random.default_rng(seed)
+    dt = sample_ms / 1000.0
+    points, now = [], 0.0
+    e_chip = e_host = 0.0
+    for task in phases:
+        m = simulate_task(task, cap, spec)
+        if m.runtime <= 0:
+            continue
+        if task.is_idle:
+            f = m.clock_fraction
+            p_host = spec.host.p_idle + \
+                (spec.host.p_max - spec.host.p_idle) * f**3
+        else:
+            p_host = spec.host.p_idle
+        p_chip = max(m.avg_power - p_host, 0.0)
+        e_chip += p_chip * m.runtime
+        e_host += p_host * m.runtime
+        n = max(int(round(m.runtime / dt)), 1)
+        for i in range(n):
+            jc = float(rng.normal(0, jitter_sigma)) if jitter_sigma else 0.0
+            jh = float(rng.normal(0, jitter_sigma * 0.3)) \
+                if jitter_sigma else 0.0
+            pc, ph = max(p_chip + jc, 0.0), max(p_host + jh, 0.0)
+            points.append(TracePoint(t=now + i * dt, p_superchip=pc + ph,
+                                     p_chip=pc, p_host=ph))
+        now += m.runtime
+    return PowerTrace(points=points, energy_total=e_chip + e_host,
+                      energy_chip=e_chip, energy_host=e_host)
+
+
+@pytest.mark.parametrize("jitter", [0.0, 5.0])
+def test_fig1_trace_bit_identical_to_legacy_loop(jitter):
+    phases = scf_phase_sequence()
+    new = generate_trace(phases, cap=0.75 * N_PMAX, jitter_sigma=jitter,
+                         seed=3)
+    old = _legacy_generate(phases, cap=0.75 * N_PMAX, jitter_sigma=jitter,
+                           seed=3)
+    assert new == old
+
+
+def test_fig1_phase_spans_mirror_into_caller_tracer():
+    phases = scf_phase_sequence()
+    tracer = Tracer()
+    spans = phase_spans(phases, cap=0.75 * N_PMAX, tracer=tracer)
+    mirrored = tracer.spans_by_cat("phase")
+    assert [s.name for s in mirrored] == [s.name for s in spans]
+    assert all(s.track == "fig1" for s in mirrored)
+    # idle phases exist in SCF (GPU->CPU handoff) and carry host power
+    assert any(t.is_idle for t in phases)
+    for s in spans:
+        assert s.args["energy_j"] == pytest.approx(
+            (s.args["p_chip"] + s.args["p_host"]) * s.args["seconds"],
+            rel=1e-9)
+
+
+# ===========================================================================
+# serving-side request decomposition
+# ===========================================================================
+
+@pytest.mark.slow
+def test_request_costs_decomposition():
+    import jax
+
+    from repro.configs.base import reduced
+    from repro.configs.registry import get_run_config
+    from repro.models import lm
+    from repro.models.layers import Ctx
+    from repro.models.params import init_params
+    from repro.power import PowerManager
+    from repro.serving.engine import Request, ServeEngine, \
+        serve_phase_tasks
+    from repro.sharding import RULE_SETS
+
+    cfg = reduced(get_model_config("llama3.2-3b"))
+    run = get_run_config("llama3.2-3b", remat="none", logits_chunk=16)
+    ctx = Ctx(run, RULE_SETS[run.serve_rules_name], None)
+    params = init_params(lm.model_decls(cfg), jax.random.PRNGKey(0))
+    pm = PowerManager(tasks=serve_phase_tasks(
+        get_model_config("llama3.2-3b"), batch=128, prompt=32768,
+        new_tokens=8, chips=256))
+    tracer = Tracer()
+    eng = ServeEngine(cfg, run, ctx, params, batch_size=2, max_seq=32,
+                      power=pm, decode_chunk=4, tracer=tracer)
+    reqs = [Request(uid=i, prompt=[1 + i, 2, 3], max_new_tokens=4)
+            for i in range(3)]
+    done = eng.generate(reqs)
+    assert len(done) == 3
+
+    costs = request_costs(tracer)
+    assert sorted(costs) == [0, 1, 2]
+    for c in costs.values():
+        assert c.prefill_s > 0.0 and c.prefill_j > 0.0
+        assert c.decode_s > 0.0 and c.decode_j > 0.0
+        assert c.queue_wait_s >= 0.0
+        assert c.total_s >= c.prefill_s + c.decode_s
+    # batch_size 2 < 3 requests: the third waited for a slot
+    assert max(c.queue_wait_s for c in costs.values()) > 0.0
+    # every modeled joule the engine traced lands on exactly one request
+    span_j = sum(float(s.args.get("energy_j", 0.0))
+                 for s in tracer.spans_by_cat("phase"))
+    assert sum(c.total_j for c in costs.values()) == \
+        pytest.approx(span_j, rel=1e-9)

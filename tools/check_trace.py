@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Validate a Chrome/Perfetto ``trace_event`` JSON file structurally.
+
+  python tools/check_trace.py TRACE.json [TRACE2.json ...]
+
+Run in CI against the trace artifacts the benchmarks and
+``repro.launch.fleet --trace-out`` export (see ``docs/observability.md``)
+so a malformed event can never reach Perfetto unnoticed.  Deliberately
+stdlib-only and independent of ``repro`` — the docs job runs it without
+PYTHONPATH — so it checks the FORMAT contract, not the producer's
+internals:
+
+  * the file is a JSON object with a ``traceEvents`` list;
+  * every event has a string ``ph`` and integer ``pid``/``tid``;
+  * ``X`` (complete) events carry name/cat/ts and a ``dur >= 0``;
+  * ``B``/``E`` (duration) events balance per tid, properly nested;
+  * ``i`` (instant) events carry name/ts and a valid scope;
+  * ``C`` (counter) events carry ts and an args dict of numbers;
+  * per tid, ``ts`` is monotonically non-decreasing in file order
+    (the exporter's deterministic sort guarantees it; a violation
+    means the producer or a by-hand edit broke the contract).
+
+Exits non-zero with a per-file error report on the first invalid file.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+VALID_PH = {"X", "B", "E", "i", "I", "C", "M"}
+INSTANT_SCOPES = {"g", "p", "t"}
+
+
+def check_event(ev: object, i: int, errors: list[str]) -> dict | None:
+    if not isinstance(ev, dict):
+        errors.append(f"event[{i}]: not an object")
+        return None
+    ph = ev.get("ph")
+    if not isinstance(ph, str) or ph not in VALID_PH:
+        errors.append(f"event[{i}]: bad ph {ph!r}")
+        return None
+    for key in ("pid", "tid"):
+        if not isinstance(ev.get(key), int):
+            errors.append(f"event[{i}] ({ph}): {key} missing or not int")
+            return None
+    if ph == "M":
+        if not isinstance(ev.get("name"), str):
+            errors.append(f"event[{i}] (M): name missing")
+        return ev
+    ts = ev.get("ts")
+    if not isinstance(ts, (int, float)):
+        errors.append(f"event[{i}] ({ph}): ts missing or not a number")
+        return None
+    if ph in ("X", "B", "i", "I"):
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            errors.append(f"event[{i}] ({ph}): name missing or empty")
+    if ph == "X":
+        dur = ev.get("dur")
+        if not isinstance(dur, (int, float)):
+            errors.append(f"event[{i}] (X): dur missing or not a number")
+        elif dur < 0:
+            errors.append(f"event[{i}] (X) {ev.get('name')!r}: "
+                          f"negative dur {dur}")
+    if ph in ("i", "I"):
+        scope = ev.get("s", "t")
+        if scope not in INSTANT_SCOPES:
+            errors.append(f"event[{i}] ({ph}): bad scope {scope!r}")
+    if ph == "C":
+        args = ev.get("args")
+        if not isinstance(args, dict) or not args:
+            errors.append(f"event[{i}] (C): args missing or empty")
+        else:
+            for k, v in args.items():
+                if not isinstance(v, (int, float)):
+                    errors.append(f"event[{i}] (C): args[{k!r}] not a "
+                                  f"number: {v!r}")
+    return ev
+
+
+def check_file(path: str) -> list[str]:
+    errors: list[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as exc:
+        return [f"unreadable: {exc}"]
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["not a trace_event JSON object (no traceEvents key)"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["traceEvents is not a list"]
+    if not events:
+        errors.append("traceEvents is empty")
+
+    last_ts: dict[int, float] = {}       # tid -> last seen ts
+    open_stacks: dict[int, list] = {}    # tid -> B-event name stack
+    counts = {ph: 0 for ph in VALID_PH}
+    for i, raw in enumerate(events):
+        ev = check_event(raw, i, errors)
+        if ev is None:
+            continue
+        ph = ev["ph"]
+        counts[ph] += 1
+        if ph == "M":
+            continue
+        tid, ts = ev["tid"], ev["ts"]
+        if ts < last_ts.get(tid, float("-inf")):
+            errors.append(
+                f"event[{i}] ({ph}) {ev.get('name')!r}: ts {ts} goes "
+                f"backwards on tid {tid} (prev {last_ts[tid]})")
+        last_ts[tid] = ts
+        if ph == "B":
+            open_stacks.setdefault(tid, []).append(ev.get("name"))
+        elif ph == "E":
+            stack = open_stacks.get(tid)
+            if not stack:
+                errors.append(f"event[{i}] (E): end with no open begin "
+                              f"on tid {tid}")
+            else:
+                stack.pop()
+    for tid, stack in sorted(open_stacks.items()):
+        if stack:
+            errors.append(f"tid {tid}: {len(stack)} unclosed begin "
+                          f"event(s): {stack[-3:]}")
+    if not errors:
+        n_span = counts["X"] + counts["B"]
+        print(f"{path}: OK — {len(events)} events "
+              f"({n_span} spans, {counts['i'] + counts['I']} instants, "
+              f"{counts['C']} counter samples, {counts['M']} metadata) "
+              f"on {len(last_ts)} tracks")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__.strip().splitlines()[0])
+        print(f"usage: {sys.argv[0]} TRACE.json [TRACE2.json ...]")
+        return 2
+    bad = 0
+    for path in argv:
+        errors = check_file(path)
+        for e in errors[:20]:
+            print(f"{path}: {e}", file=sys.stderr)
+        if len(errors) > 20:
+            print(f"{path}: ... and {len(errors) - 20} more",
+                  file=sys.stderr)
+        bad += bool(errors)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
