@@ -1,0 +1,287 @@
+"""Paged KV cache + copy-on-write prefix sharing: the serving-memory
+benchmark for PR "paged KV cache with CoW prefix sharing".
+
+Runs the SAME request stream — every prompt opening with one shared
+system-prefix — through three ``ServeEngine`` arms:
+
+  dense    the per-slot ``(B, max_seq, ...)`` cache (baseline)
+  paged    block-pool cache, no sharing (paging overhead in isolation)
+  shared   paged + prefix registry: admissions after the first map the
+           cached prefix blocks (CoW on the partial tail block) and
+           prefill only their private suffix
+
+and reports, per arm:
+
+  * prefill tok/s   effective prefill throughput on a prefill-dominated
+                    probe: prompt tokens admitted / MODELED prefill
+                    seconds (the PowerManager roofline — the same basis
+                    as J/token).  Skipped prefix rows are chunk programs
+                    the arm never ran, so they cost no modeled time.
+                    Wall-clock variants ride along in the JSON, but the
+                    gate uses the modeled figure: at CPU-interpret toy
+                    scale wall time is jit-dispatch noise, while the
+                    roofline tracks what an accelerator would do.
+  * tokens/s        generated-token throughput on the serving scenario
+  * J/token         modeled prefill+decode energy per generated token
+                    (prefill phases cost one call per CHUNK PROGRAM run,
+                    so skipped prefix chunks are energy not spent)
+  * HBM bytes/slot  resident cache footprint per slot (dense: the full
+                    lane; paged: peak pool blocks actually mapped)
+  * migration bytes a mid-run drain/restore round-trip's payload bytes
+                    (prefix-shared slots ship only their private suffix)
+  * prefix rows skipped / registry hits / CoW copies (shared arm)
+
+Token streams are asserted BIT-IDENTICAL across all three arms, on the
+straight runs and through the drain/restore round-trip.  Machine-readable
+results go to ``BENCH_prefix.json``; ``--min-prefill-speedup`` (CI smoke)
+fails loudly when shared/dense effective prefill throughput drops below
+the threshold, and the shared arm must strictly shrink migration bytes.
+
+  PYTHONPATH=src:. python benchmarks/prefix_sharing.py \
+      [--requests 18] [--min-prefill-speedup 1.2] [--trace-out T.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from benchmarks.common import bench_meta, emit
+from repro.configs.base import reduced
+from repro.configs.registry import get_model_config, get_run_config
+from repro.models import lm
+from repro.models.layers import Ctx
+from repro.models.params import init_params
+from repro.obs import Tracer, dump_chrome_trace
+from repro.power import PowerManager
+from repro.serving.engine import Request, ServeEngine, serve_phase_tasks
+from repro.sharding import RULE_SETS
+
+ARCH = "llama3.2-3b"
+MAX_SEQ = 64
+BATCH = 4
+BLOCK_SIZE = 8
+PREFILL_CHUNK = 16
+DECODE_CHUNK = 4
+SEED = 0
+
+#: The shared system prefix every prompt opens with — 33 tokens lands a
+#: PARTIAL tail block (33 = 4 full blocks of 8 + 1 row), so the shared
+#: arm exercises the copy-on-write pivot on every admission.
+PREFIX_LEN = 33
+
+ARMS = ("dense", "paged", "shared")
+
+
+def _scenario(n_requests: int, max_new: int):
+    """Shared 33-token prefix + per-request suffix (3..10 tokens)."""
+    prefix = [(7 * j + 11) % 251 + 2 for j in range(PREFIX_LEN)]
+    out = []
+    for i in range(n_requests):
+        slen = 3 + (5 * i) % 8
+        suffix = [(13 * i + 3 * j + 1) % 251 + 2 for j in range(slen)]
+        out.append((prefix + suffix, max_new))
+    return out
+
+
+def _requests(scenario):
+    return [Request(uid=i, prompt=list(p), max_new_tokens=n,
+                    prefix_len=PREFIX_LEN)
+            for i, (p, n) in enumerate(scenario)]
+
+
+def _build(kind: str, tracer=None):
+    cfg = reduced(get_model_config(ARCH))
+    run = get_run_config(ARCH, remat="none", logits_chunk=64)
+    ctx = Ctx(run, RULE_SETS[run.serve_rules_name], None)
+    params = init_params(lm.model_decls(cfg), jax.random.PRNGKey(SEED))
+    pm = PowerManager(tasks=serve_phase_tasks(
+        get_model_config(ARCH), batch=128, prompt=32768, new_tokens=16,
+        chips=256))
+    return ServeEngine(cfg, run, ctx, params, batch_size=BATCH,
+                       max_seq=MAX_SEQ, power=pm,
+                       prefill_chunk=PREFILL_CHUNK,
+                       decode_chunk=DECODE_CHUNK,
+                       paged=kind != "dense", block_size=BLOCK_SIZE,
+                       prefix_sharing=kind == "shared", tracer=tracer)
+
+
+def _rows_bytes_per_slot(eng) -> float:
+    """Resident cache footprint one slot costs this engine: the full
+    dense lane, or the pool blocks the arm actually mapped at peak."""
+    spec = lm.cache_slot_spec(eng.cfg)
+    rows = [leaf for key, kind in spec.items() if kind == lm.SLOT_ROWS
+            for leaf in jax.tree.leaves(eng._cache[key])]
+    total = sum(leaf.nbytes for leaf in rows)
+    if not eng.paged:
+        return total / eng.batch_size
+    # pool leaves hold n_blocks + 1 physical blocks (the parking block
+    # is bookkeeping, not per-slot capacity)
+    per_block = total / (eng.n_blocks + 1)
+    return per_block * eng.peak_used_blocks / eng.batch_size
+
+
+def _streams(done) -> dict:
+    return {r.uid: list(r.generated) for r in done}
+
+
+def _modeled_phase_s(eng, name: str) -> float:
+    """Summed modeled runtime of every ``name`` phase this engine ran
+    (PhaseRecord history; runs here stay far below history_limit)."""
+    return sum(r.modeled.runtime for r in eng.power.history
+               if r.name == name and r.modeled is not None)
+
+
+def _run_probe(kind: str, scenario) -> dict:
+    """Prefill-dominated probe: modeled prefill time ~ chunk programs
+    actually run, so skipped prefix rows show up as throughput."""
+    eng = _build(kind)
+    reqs = _requests(scenario)
+    t0 = time.perf_counter()
+    done = eng.generate(reqs)
+    wall = time.perf_counter() - t0
+    prompt_tokens = sum(len(p) for p, _ in scenario)
+    prefill_s = _modeled_phase_s(eng, "prefill")
+    return {"engine": eng, "streams": _streams(done), "wall_s": wall,
+            "prefill_modeled_s": prefill_s,
+            "prefill_tokens_per_s": prompt_tokens / prefill_s,
+            "prefill_tokens_per_s_wall": prompt_tokens / wall}
+
+
+def _run_serve(kind: str, scenario, tracer=None) -> dict:
+    """Serving scenario with a mid-run drain/restore round-trip."""
+    eng = _build(kind, tracer=tracer)
+    t0 = time.perf_counter()
+    eng.start(_requests(scenario))
+    eng.step()                      # first wave mid-decode
+    snaps = eng.drain()             # full drain: warm + cold snapshots
+    migration_bytes = sum(s.payload_bytes for s in snaps)
+    assert any(s.warm for s in snaps), "drain caught no warm slot"
+    eng.restore(snaps)
+    while eng.pending:
+        eng.step()
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(r.generated) for r in eng.finished)
+    energy = eng.power.modeled_energy_j
+    return {
+        "engine": eng,
+        "streams": _streams(eng.finished),
+        "wall_s": wall,
+        "tokens": n_tok,
+        "tokens_per_s": n_tok / wall,
+        "j_per_token": energy / n_tok if n_tok else 0.0,
+        "migration_bytes": migration_bytes,
+        "hbm_bytes_per_slot": _rows_bytes_per_slot(eng),
+    }
+
+
+def run(n_requests: int = 18, min_prefill_speedup: float | None = None,
+        json_path: str = "BENCH_prefix.json",
+        trace_out: str | None = None) -> dict:
+    probe_scn = _scenario(n_requests, max_new=2)
+    serve_scn = _scenario(n_requests, max_new=8)
+    results: dict = {}
+    for kind in ARMS:
+        # warmup off the clock: jit traces for every chunk size + decode
+        _build(kind).generate(_requests(probe_scn[:2]))
+        probe = _run_probe(kind, probe_scn)
+        tracer = Tracer() if (trace_out and kind == "shared") else None
+        serve = _run_serve(kind, serve_scn, tracer=tracer)
+        eng = serve.pop("engine")
+        peng = probe.pop("engine")
+        results[kind] = {
+            "prefill_tokens_per_s": probe["prefill_tokens_per_s"],
+            "prefill_tokens_per_s_wall": probe["prefill_tokens_per_s_wall"],
+            "prefill_modeled_s": probe["prefill_modeled_s"],
+            **{k: v for k, v in serve.items() if k != "streams"},
+            "prefill_tokens_skipped": (eng.prefill_tokens_skipped
+                                       + peng.prefill_tokens_skipped),
+            "cow_copies": eng.cow_copies + peng.cow_copies,
+            "peak_used_blocks": max(eng.peak_used_blocks,
+                                    peng.peak_used_blocks),
+        }
+        results[kind]["probe_streams"] = probe["streams"]
+        results[kind]["serve_streams"] = serve["streams"]
+        if tracer is not None:
+            dump_chrome_trace(tracer, trace_out,
+                              process_name="prefix-sharing")
+            emit("prefix_trace_spans", 0.0, str(len(tracer.spans)))
+
+    # BIT-IDENTITY: all arms, both scenarios, through drain/restore
+    for kind in ("paged", "shared"):
+        for which in ("probe_streams", "serve_streams"):
+            assert results[kind][which] == results["dense"][which], (
+                f"{kind} {which} diverged from dense — paging broke "
+                f"bit-identity")
+    for kind in ARMS:
+        results[kind].pop("probe_streams")
+        results[kind].pop("serve_streams")
+
+    speedup = (results["shared"]["prefill_tokens_per_s"]
+               / results["dense"]["prefill_tokens_per_s"])
+    mig_ratio = (results["shared"]["migration_bytes"]
+                 / results["dense"]["migration_bytes"])
+    results["prefill_speedup_shared_vs_dense"] = speedup
+    results["migration_bytes_ratio_shared_vs_dense"] = mig_ratio
+    results["scenario"] = {
+        "arch": ARCH, "requests": n_requests, "batch": BATCH,
+        "max_seq": MAX_SEQ, "block_size": BLOCK_SIZE,
+        "prefix_len": PREFIX_LEN, "prefill_chunk": PREFILL_CHUNK,
+        "decode_chunk": DECODE_CHUNK,
+    }
+    results["meta"] = bench_meta(seed=SEED, config=results["scenario"])
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=1)
+
+    for kind in ARMS:
+        r = results[kind]
+        emit(f"prefix_{kind}", r["wall_s"] * 1e6,
+             f"{r['prefill_tokens_per_s']:.1f}pretok/s"
+             f"|{r['tokens_per_s']:.1f}tok/s|{r['j_per_token']:.2f}J/tok"
+             f"|{r['hbm_bytes_per_slot']/1024:.1f}KiB/slot"
+             f"|mig={r['migration_bytes']}B"
+             f"|skip={r['prefill_tokens_skipped']}|cow={r['cow_copies']}")
+    emit("prefix_prefill_speedup", 0.0, f"{speedup:.2f}x")
+    emit("prefix_migration_ratio", 0.0, f"{mig_ratio:.3f}x")
+
+    # acceptance gates: sharing must actually fire, shrink migrations,
+    # and not cost pool residency vs unshared paging
+    assert results["shared"]["prefill_tokens_skipped"] > 0, (
+        "prefix sharing never skipped a row — registry path broken")
+    assert results["shared"]["cow_copies"] > 0, (
+        "no copy-on-write pivot fired — the partial tail block should "
+        "CoW on every sharing admission")
+    assert mig_ratio < 1.0, (
+        f"prefix sharing did not shrink migration bytes ({mig_ratio:.3f}x)")
+    assert (results["shared"]["hbm_bytes_per_slot"]
+            <= results["paged"]["hbm_bytes_per_slot"] + 1e-9), (
+        "sharing increased peak pool residency over unshared paging")
+    if min_prefill_speedup is not None and speedup < min_prefill_speedup:
+        raise SystemExit(
+            f"prefix-sharing regression: shared/dense effective prefill "
+            f"throughput {speedup:.2f}x below threshold "
+            f"{min_prefill_speedup}x")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=18)
+    ap.add_argument("--min-prefill-speedup", type=float, default=None,
+                    help="fail loudly when shared/dense effective prefill "
+                         "tokens-per-s falls below this ratio (CI smoke)")
+    ap.add_argument("--json-path", default="BENCH_prefix.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto/Chrome trace_event JSON of the "
+                         "shared arm's serve run to this path")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.requests, args.min_prefill_speedup, args.json_path,
+        args.trace_out)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,10 +7,10 @@ import sys
 import traceback
 
 from benchmarks import (cell_caps, chaos, fig1_power_trace, fig2_sed_sweep,
-                        fig3_ed_sweep, fleet_power, migration, roofline,
-                        serving_throughput, steering_policy,
-                        table1_task_profile, table2_optimal_caps,
-                        traffic_slo)
+                        fig3_ed_sweep, fleet_power, migration,
+                        prefix_sharing, roofline, serving_throughput,
+                        steering_policy, table1_task_profile,
+                        table2_optimal_caps, traffic_slo)
 
 BENCHES = [
     ("table1", table1_task_profile),
@@ -26,6 +26,7 @@ BENCHES = [
     ("migrate", migration),
     ("traffic", traffic_slo),
     ("chaos", chaos),
+    ("prefix", prefix_sharing),
 ]
 
 

@@ -410,8 +410,14 @@ class ServeJob:
         if self.engine is not None:
             if not self._started:
                 return 0
-            return max(0, self.engine.slot_limit - self.engine.active_slots
-                       - self.engine.queue_depth)
+            hint = getattr(self.engine, "capacity_hint", None)
+            if hint is not None:
+                # paged engines bound room by block-pool headroom too —
+                # sized for a typical adopted stream (half the row budget)
+                room = hint(max(1, self.engine.max_seq // 2))
+            else:
+                room = self.engine.slot_limit - self.engine.active_slots
+            return max(0, room - self.engine.queue_depth)
         if self.open_loop:
             idle = sum(1 for s in self._slots if s.req is None)
             return max(0, idle - len(self._pending))

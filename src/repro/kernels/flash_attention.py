@@ -258,6 +258,118 @@ def flash_decode(q, k_cache, v_cache, kv_len, *, softcap=None,
 
 
 # ---------------------------------------------------------------------------
+# paged flash-decode: same online-softmax math as flash_decode, but K/V live
+# in a pool of fixed-size blocks (n_blocks, bs, K, D) and each slot reads its
+# rows through a per-slot block table.  The table rides as a SCALAR PREFETCH
+# argument (PrefetchScalarGridSpec): the k/v BlockSpec index_maps dereference
+# it, so the DMA engine fetches exactly the slot's blocks — the dense view is
+# never materialized (the vLLM paged-attention idiom).
+# ---------------------------------------------------------------------------
+
+def _decode_paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale, softcap,
+                         local_window, block_size, n_blk, sq, g):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    k_start = ib * block_size          # LOGICAL position of this block
+
+    @pl.when(k_start < kv_len)
+    def _body():
+        q = q_ref[0, :, :, :].astype(jnp.float32).reshape(
+            sq * g, q_ref.shape[-1]) * scale                 # (sq*g, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        q_pos = kv_len - sq + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 0) // g
+        mask = k_pos <= q_pos
+        if local_window is not None:
+            mask &= k_pos > q_pos - local_window
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ib == n_blk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, :, :] = (acc_ref[...] / denom).reshape(
+            o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "softcap", "local_window", "scale", "interpret"))
+def flash_decode_paged(q, k_pool, v_pool, kv_len, block_tables, *,
+                       softcap=None, local_window=None, scale=None,
+                       interpret=False):
+    """q: (B, Sq, H, D); pools: (n_blocks, bs, K, D); kv_len: (B,) int32
+    valid length INCLUDING the Sq new tokens; block_tables: (B, max_blocks)
+    int32 — slot b's logical rows [i*bs, (i+1)*bs) live in pool block
+    ``block_tables[b, i]``.  The kv grid dimension walks the slot's table;
+    fully-past-kv_len blocks are skipped (no DMA, no compute)."""
+    B, Sq, H, D = q.shape
+    n_blocks, bs, K = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    max_blocks = block_tables.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    g = H // K
+    qg = q.reshape(B, Sq, K, g, D).transpose(0, 2, 1, 3, 4) \
+          .reshape(B, K, Sq * g, D)
+
+    kernel = functools.partial(_decode_paged_kernel, scale=scale,
+                               softcap=softcap, local_window=local_window,
+                               block_size=bs, n_blk=max_blocks, sq=Sq, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, Sq * g, D),
+                         lambda b, h, ib, len_ref, bt_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, ib, len_ref, bt_ref:
+                         (bt_ref[b, ib], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, ib, len_ref, bt_ref:
+                         (bt_ref[b, ib], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Sq * g, D),
+                               lambda b, h, ib, len_ref, bt_ref:
+                               (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Sq * g,), jnp.float32),
+            pltpu.VMEM((Sq * g,), jnp.float32),
+            pltpu.VMEM((Sq * g, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Sq * g, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), block_tables.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(B, K, Sq, g, D).transpose(0, 2, 1, 3, 4) \
+              .reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
 # per-slot-offset KV cache write: each batch row lands its Sn new rows at its
 # own sequence offset (continuous batching: slots hold requests at different
 # positions).  A row whose write would cross the end of the cache is dropped
@@ -309,3 +421,89 @@ def cache_update(k_cache, v_cache, k_new, v_new, index, *, interpret=False):
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(index.astype(jnp.int32), k_new, v_new, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache write: each grid step lands ONE new row into the pool block
+# its slot's table maps that logical position to.  The table and the per-slot
+# offsets ride as scalar prefetch so the destination block is computed in the
+# BlockSpec index_map — the kernel body only ever sees the one target block.
+# Whole-row drop (index + Sn > logical end) matches the dense kernel's
+# done-slot convention; dropped steps clamp to a valid block and copy through.
+# ---------------------------------------------------------------------------
+
+def _cache_update_paged_kernel(idx_ref, bt_ref, kn_ref, vn_ref,
+                               kc_ref, vc_ref, ko_ref, vo_ref, *,
+                               block_size, s_new, s_logical):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    idx = idx_ref[b]
+    off = (idx + j) % block_size
+
+    # Copy-through exactly once per destination block (its first visit:
+    # the slot's first row, or a block-boundary crossing).  Re-copying on
+    # every step would clobber the rows earlier steps wrote to this block —
+    # consecutive same-block steps keep the output block resident, so later
+    # row writes land on top of the single copy.
+    @pl.when((j == 0) | (off == 0))
+    def _carry():
+        ko_ref[...] = kc_ref[...]
+        vo_ref[...] = vc_ref[...]
+
+    @pl.when((idx >= 0) & (idx + s_new <= s_logical))
+    def _write():
+        ko_ref[0, pl.dslice(off, 1), :, :] = \
+            kn_ref[0, :, :, :].astype(ko_ref.dtype)
+        vo_ref[0, pl.dslice(off, 1), :, :] = \
+            vn_ref[0, :, :, :].astype(vo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_update_paged(k_pool, v_pool, k_new, v_new, index, block_tables, *,
+                       interpret=False):
+    """Scatter k/v_new (B, Sn, K, D) into paged pools (n_blocks, bs, K, D)
+    at the (block, offset) destinations slot b's ``block_tables`` row maps
+    logical positions [index[b], index[b]+Sn) to.  Slots whose write would
+    cross the logical end (max_blocks*bs) are dropped whole.  The engine
+    guarantees destination blocks are private (CoW at admission), so no two
+    slots write the same pool row.  Returns (k_pool', v_pool')."""
+    B, Sn, K, D = k_new.shape
+    bs = k_pool.shape[1]
+    max_blocks = block_tables.shape[1]
+    s_logical = max_blocks * bs
+
+    def _pool_map(b, j, idx_ref, bt_ref):
+        blk = jnp.clip((idx_ref[b] + j) // bs, 0, max_blocks - 1)
+        return (bt_ref[b, blk], 0, 0, 0)
+
+    kernel = functools.partial(_cache_update_paged_kernel, block_size=bs,
+                               s_new=Sn, s_logical=s_logical)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Sn),
+        in_specs=[
+            pl.BlockSpec((1, 1, K, D),
+                         lambda b, j, idx_ref, bt_ref: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1, K, D),
+                         lambda b, j, idx_ref, bt_ref: (b, j, 0, 0)),
+            pl.BlockSpec((1, bs, K, D), _pool_map),
+            pl.BlockSpec((1, bs, K, D), _pool_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, K, D), _pool_map),
+            pl.BlockSpec((1, bs, K, D), _pool_map),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+        ],
+        input_output_aliases={4: 0, 5: 1},
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(index.astype(jnp.int32), block_tables.astype(jnp.int32),
+      k_new, v_new, k_pool, v_pool)

@@ -65,6 +65,45 @@ def kv_cache_update(k_cache, v_cache, k_new, v_new, index, *,
     return ref.kv_cache_update_ref(k_cache, v_cache, k_new, v_new, index)
 
 
+def decode_attention_paged(q, k_pool, v_pool, kv_len, block_tables, *,
+                           softcap=None, local_window=None, scale=None,
+                           mode="reference"):
+    """Decode-step / chunked-prefill attention over a PAGED cache: the
+    pools (n_blocks, bs, K, D) hold fixed-size blocks and each slot reads
+    its rows through its ``block_tables`` row ((B, max_blocks) int32),
+    ragged up to kv_len (B,).  The reference path gathers the dense
+    per-slot view and reuses the dense decode oracle (bit-identical by
+    construction); the Pallas path gathers block-by-block through the
+    table via scalar prefetch, never materializing the dense view."""
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import flash_attention
+        return flash_attention.flash_decode_paged(
+            q, k_pool, v_pool, kv_len, block_tables, softcap=softcap,
+            local_window=local_window, scale=scale,
+            interpret=(mode == "pallas_interpret"))
+    return ref.decode_attention_paged_ref(
+        q, k_pool, v_pool, kv_len, block_tables, softcap=softcap,
+        local_window=local_window, scale=scale)
+
+
+def kv_cache_update_paged(k_pool, v_pool, k_new, v_new, index, block_tables,
+                          *, mode="reference"):
+    """Write k/v_new (B, Sn, K, D) into the paged pools at the
+    (block, offset) destinations each slot's table maps rows
+    [index, index+Sn) to; a slot whose write crosses its table's logical
+    end is dropped whole (done-slot semantics, index = max_seq).  The
+    engine guarantees write destinations are PRIVATE blocks (copy-on-
+    write happens at admission), so no two slots scatter into the same
+    row.  Returns (k_pool', v_pool')."""
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import flash_attention
+        return flash_attention.cache_update_paged(
+            k_pool, v_pool, k_new, v_new, index, block_tables,
+            interpret=(mode == "pallas_interpret"))
+    return ref.kv_cache_update_paged_ref(k_pool, v_pool, k_new, v_new,
+                                         index, block_tables)
+
+
 def slot_gather(a, slot, *, axis=1, mode="reference"):
     """Lift one slot's lane out of a stacked cache leaf along ``axis``
     (the batch/slot dim): (L, B, ...) -> (L, ...).  The export half of

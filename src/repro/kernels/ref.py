@@ -144,6 +144,59 @@ def kv_cache_update_ref(k_cache, v_cache, k_new, v_new, index):
     return ck, cv
 
 
+def paged_gather_ref(pool, block_tables):
+    """Materialize the dense per-slot view of a paged KV pool.
+
+    pool: (n_blocks, bs, K, D) fixed-size cache blocks; block_tables:
+    (B, max_blocks) int32 per-slot block ids.  Returns the dense
+    (B, max_blocks * bs, K, D) cache each slot's table describes.  Rows
+    beyond a slot's kv_len may come from unmapped / recycled blocks —
+    attention masks them exactly (NEG_INF before softmax), so the paged
+    path is BIT-IDENTICAL to a dense cache of the same logical shape."""
+    n_blocks, bs = pool.shape[:2]
+    B, max_blocks = block_tables.shape
+    dense = jnp.take(pool, block_tables.reshape(-1), axis=0,
+                     mode="clip")
+    return dense.reshape((B, max_blocks * bs) + pool.shape[2:])
+
+
+def decode_attention_paged_ref(q, k_pool, v_pool, kv_len, block_tables, *,
+                               scale=None, softcap=None, local_window=None):
+    """Paged decode/chunked-prefill oracle: gather each slot's blocks into
+    the dense (B, max_blocks*bs, K, D) view, then run the ragged-kv_len
+    decode attention.  Identical shapes and reduction order to the dense
+    path, so outputs are bit-identical to ``decode_attention_ref`` over a
+    dense cache holding the same valid rows."""
+    k_dense = paged_gather_ref(k_pool, block_tables)
+    v_dense = paged_gather_ref(v_pool, block_tables)
+    return decode_attention_ref(q, k_dense, v_dense, kv_len, scale=scale,
+                                softcap=softcap, local_window=local_window)
+
+
+def kv_cache_update_paged_ref(k_pool, v_pool, k_new, v_new, index,
+                              block_tables):
+    """Paged per-slot cache write oracle: scatter k/v_new (B, Sn, K, D)
+    into the pools (n_blocks, bs, K, D) at the (block, offset)
+    destinations each slot's table maps its rows [index, index+Sn) to.
+    A slot whose write would cross its table's logical end
+    (max_blocks * bs rows) is dropped WHOLE — the same done-slot
+    convention as the dense ``kv_cache_update_ref``."""
+    B, Sn = k_new.shape[:2]
+    n_blocks, bs = k_pool.shape[:2]
+    max_blocks = block_tables.shape[1]
+    S = max_blocks * bs
+    oob = (index < 0) | (index + Sn > S)
+    pos = index[:, None] + jnp.arange(Sn)[None, :]            # (B, Sn)
+    blk_idx = jnp.clip(pos // bs, 0, max_blocks - 1)
+    blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)  # (B, Sn)
+    # dropped rows target block n_blocks: out of range -> mode="drop"
+    blk = jnp.where(oob[:, None], n_blocks, blk)
+    off = jnp.clip(pos, 0, S - 1) % bs
+    kp = k_pool.at[blk, off].set(k_new.astype(k_pool.dtype), mode="drop")
+    vp = v_pool.at[blk, off].set(v_new.astype(v_pool.dtype), mode="drop")
+    return kp, vp
+
+
 def slot_gather_ref(a, slot, axis: int = 1):
     """Lift one slot's lane out of a stacked cache leaf: drop ``axis``
     (the batch/slot dim) at index ``slot``.  (L, B, ...) -> (L, ...)."""

@@ -159,9 +159,11 @@ def attention_decls(cfg: ModelConfig, layers: int = 0,
 
 def apply_attention(ctx: Ctx, cfg: ModelConfig, p: dict, x, cos, sin, *,
                     local_window=None, cache=None, cache_index=None,
-                    x_kv=None):
+                    x_kv=None, block_tables=None):
     """x: (B, S, d_in).  With ``cache`` (dict k/v (B, Smax, K, hd)) performs a
-    decode step and returns (y, new_cache)."""
+    decode step and returns (y, new_cache).  With ``block_tables``
+    ((B, max_blocks) int32) the cache leaves are PAGED pools
+    (n_blocks, bs, K, hd) and every read/write goes through the table."""
     c = ctx.cdtype
     x_kv = x if x_kv is None else x_kv
     B, S = x.shape[:2]
@@ -179,6 +181,29 @@ def apply_attention(ctx: Ctx, cfg: ModelConfig, p: dict, x, cos, sin, *,
              else cfg.head_dim ** -0.5)
 
     new_cache = None
+    if cache is not None and block_tables is not None:
+        # paged path: per-slot offsets (or a scalar prefill cursor broadcast
+        # to all slots) resolve to (block, offset) pool rows via the table.
+        # No cst() on pool leaves — the pool's leading dim is blocks, not
+        # batch, so the dense cache's logical axes don't apply.
+        per_slot = jnp.ndim(cache_index) >= 1
+        idx_vec = (jnp.asarray(cache_index, jnp.int32) if per_slot
+                   else jnp.full((B,), cache_index, jnp.int32))
+        ck, cv = ops.kv_cache_update_paged(cache["k"], cache["v"], k, v,
+                                           idx_vec, block_tables,
+                                           mode=ctx.run.kernel_mode)
+        new_cache = {"k": ck, "v": cv}
+        kv_len = idx_vec + x.shape[1]
+        out = ops.decode_attention_paged(q, ck.astype(c), cv.astype(c),
+                                         kv_len, block_tables,
+                                         softcap=cfg.attn_softcap,
+                                         local_window=local_window,
+                                         scale=scale,
+                                         mode=ctx.run.kernel_mode)
+        out = ctx.cst(out, "act_batch", "act_seq", "act_heads", None)
+        y = jnp.einsum("bse,ed->bsd", out.reshape(B, out.shape[1], H * hd),
+                       p["wo"].astype(c))
+        return ctx.cst(y, "act_batch", "act_seq", "act_embed"), new_cache
     if cache is not None:
         per_slot = jnp.ndim(cache_index) >= 1
         if not per_slot and _use_seqsharded_decode(ctx, cfg, x, cache):
@@ -239,6 +264,30 @@ def abstract_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype,
 
 KV_CACHE_AXES = {"k": ("layers", "act_batch", "act_kv_seq", None, None),
                  "v": ("layers", "act_batch", "act_kv_seq", None, None)}
+
+
+def empty_paged_kv_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                         dtype, layers: int = 0):
+    """Paged KV pool: (n_blocks, block_size, K, hd) per layer — a shared
+    arena of fixed-size blocks addressed through per-slot block tables
+    instead of a dense (batch, max_seq, ...) lane per slot."""
+    shape = _stack((n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim),
+                   layers)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_paged_kv_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                            dtype, layers: int = 0):
+    shape = _stack((n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim),
+                   layers)
+    sds = jax.ShapeDtypeStruct(shape, dtype)
+    return {"k": sds, "v": sds}
+
+
+# pool leading dim is the block arena, not batch: replicate (the paged
+# serving path is single-host today; block-sharded pools are future work)
+PAGED_KV_CACHE_AXES = {"k": ("layers", None, None, None, None),
+                       "v": ("layers", None, None, None, None)}
 
 
 def _use_seqsharded_decode(ctx: Ctx, cfg: ModelConfig, x, cache) -> bool:

@@ -153,13 +153,14 @@ def _stack_scan(ctx: L.Ctx, body, carry, xs):
 
 
 def _tf_block(ctx: L.Ctx, cfg: ModelConfig, p, h, cos, sin, *,
-              local_window=None, cache=None, cache_index=None):
+              local_window=None, cache=None, cache_index=None,
+              block_tables=None):
     """One transformer block; returns (h, new_cache, aux)."""
     post = "post_ln1" in p
     a_in = L.apply_norm(cfg, p["ln1"], h)
     attn_out, new_cache = L.apply_attention(
         ctx, cfg, p["attn"], a_in, cos, sin, local_window=local_window,
-        cache=cache, cache_index=cache_index)
+        cache=cache, cache_index=cache_index, block_tables=block_tables)
     if post:
         attn_out = L.apply_norm(cfg, p["post_ln1"], attn_out)
     # NOTE: do NOT pin the residual adds with sharding constraints — it
@@ -179,15 +180,19 @@ def _tf_block(ctx: L.Ctx, cfg: ModelConfig, p, h, cos, sin, *,
 
 
 def _scan_tf_layers(ctx: L.Ctx, cfg: ModelConfig, stack, h, cos, sin, *,
-                    local_window=None, cache=None, cache_index=None):
-    """Scan one homogeneous transformer stack.  cache: stacked kv or None."""
+                    local_window=None, cache=None, cache_index=None,
+                    block_tables=None):
+    """Scan one homogeneous transformer stack.  cache: stacked kv or None.
+    ``block_tables`` rides as a closure capture — it is layer-invariant, so
+    it must not be scanned over with the per-layer cache leaves."""
 
     def body(carry, xs):
         h, aux = carry
         p, c = xs
         h, new_c, a = _tf_block(ctx, cfg, p, h, cos, sin,
                                 local_window=local_window, cache=c,
-                                cache_index=cache_index)
+                                cache_index=cache_index,
+                                block_tables=block_tables)
         return (h, aux + a), new_c
 
     body = _remat(ctx, body)
@@ -240,6 +245,16 @@ def forward(ctx: L.Ctx, cfg: ModelConfig, params, batch: dict, *,
     aux = jnp.zeros((), jnp.float32)
     new_cache = None
 
+    # A paged cache carries one top-level "block_tables" entry ((B, max
+    # blocks) int32) shared by every rows-key — per-slot kv_len is uniform
+    # across layers/keys, so one table addresses all pools.  Pop it here,
+    # thread it to the attention layers, and reattach it (unchanged: the
+    # model never remaps blocks) to the new cache.
+    block_tables = None
+    if cache is not None and "block_tables" in cache:
+        cache = dict(cache)
+        block_tables = cache.pop("block_tables")
+
     if cfg.family in ("dense", "moe", "audio", "vlm"):
         if cfg.layer_pattern == "local_global":
             # gemma2: scan over (local, global) pairs
@@ -248,10 +263,12 @@ def forward(ctx: L.Ctx, cfg: ModelConfig, params, batch: dict, *,
                 (pl, pg), (cl, cg) = xs
                 h, ncl, a1 = _tf_block(ctx, cfg, pl, h, cos, sin,
                                        local_window=cfg.local_window,
-                                       cache=cl, cache_index=cache_index)
+                                       cache=cl, cache_index=cache_index,
+                                       block_tables=block_tables)
                 h, ncg, a2 = _tf_block(ctx, cfg, pg, h, cos, sin,
                                        local_window=None,
-                                       cache=cg, cache_index=cache_index)
+                                       cache=cg, cache_index=cache_index,
+                                       block_tables=block_tables)
                 return (h, aux + a1 + a2), (ncl, ncg)
 
             body = _remat(ctx, body)
@@ -268,7 +285,8 @@ def forward(ctx: L.Ctx, cfg: ModelConfig, params, batch: dict, *,
             kv = cache["kv"] if cache is not None else None
             h, aux, nkv = _scan_tf_layers(ctx, cfg, params["layers"], h,
                                           cos, sin, cache=kv,
-                                          cache_index=cache_index)
+                                          cache_index=cache_index,
+                                          block_tables=block_tables)
             if cache is not None:
                 new_cache = {"kv": nkv}
 
@@ -293,10 +311,13 @@ def forward(ctx: L.Ctx, cfg: ModelConfig, params, batch: dict, *,
     elif cfg.family == "hybrid":
         h, aux, new_cache = _zamba_forward(ctx, cfg, params, h, cos, sin,
                                            cache=cache,
-                                           cache_index=cache_index)
+                                           cache_index=cache_index,
+                                           block_tables=block_tables)
     else:
         raise ValueError(cfg.family)
 
+    if block_tables is not None and new_cache is not None:
+        new_cache["block_tables"] = block_tables
     h = L.apply_norm(cfg, params["final_norm"], h)
     return h, aux, new_cache
 
@@ -321,7 +342,7 @@ def _mamba_segment(ctx, cfg, stack, h, st):
 
 
 def _shared_block(ctx, cfg, p, inv_idx, h, emb0, cos, sin, *,
-                  cache=None, cache_index=None):
+                  cache=None, cache_index=None, block_tables=None):
     """Zamba2 shared attention block on concat(h, emb0), with per-invocation
     LoRA on q."""
     c = ctx.cdtype
@@ -337,7 +358,7 @@ def _shared_block(ctx, cfg, p, inv_idx, h, emb0, cos, sin, *,
     attn_p = dict(p["attn"])
     out, new_cache = _attention_with_qdelta(
         ctx, cfg, attn_p, a_in, q_delta, cos, sin, cache=cache,
-        cache_index=cache_index)
+        cache_index=cache_index, block_tables=block_tables)
     h = h + out
     m_in = L.apply_norm(cfg, p["ln2"], jnp.concatenate([h, emb0], axis=-1))
     gate = jnp.einsum("bsd,df->bsf", m_in, p["mlp"]["w_gate"].astype(c))
@@ -349,7 +370,7 @@ def _shared_block(ctx, cfg, p, inv_idx, h, emb0, cos, sin, *,
 
 
 def _attention_with_qdelta(ctx, cfg, p, x, q_delta, cos, sin, *,
-                           cache=None, cache_index=None):
+                           cache=None, cache_index=None, block_tables=None):
     c = ctx.cdtype
     B, S = x.shape[:2]
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -364,6 +385,24 @@ def _attention_with_qdelta(ctx, cfg, p, x, q_delta, cos, sin, *,
     scale = cfg.head_dim ** -0.5
     from repro.kernels import ops
     new_cache = None
+    if cache is not None and block_tables is not None:
+        # paged kv_shared pool: same table as the rows keys of the other
+        # families (uniform per-slot kv_len), same no-cst rationale as the
+        # paged branch of L.apply_attention
+        per_slot = jnp.ndim(cache_index) >= 1
+        idx_vec = (jnp.asarray(cache_index, jnp.int32) if per_slot
+                   else jnp.full((B,), cache_index, jnp.int32))
+        ck, cv = ops.kv_cache_update_paged(cache["k"], cache["v"], k, v,
+                                           idx_vec, block_tables,
+                                           mode=ctx.run.kernel_mode)
+        new_cache = {"k": ck, "v": cv}
+        kv_len = idx_vec + x.shape[1]
+        out = ops.decode_attention_paged(q, ck.astype(c), cv.astype(c),
+                                         kv_len, block_tables, scale=scale,
+                                         mode=ctx.run.kernel_mode)
+        y = jnp.einsum("bse,ed->bsd", out.reshape(B, out.shape[1], H * hd),
+                       p["wo"].astype(c))
+        return ctx.cst(y, "act_batch", "act_seq", "act_embed"), new_cache
     if cache is not None:
         per_slot = jnp.ndim(cache_index) >= 1
         if not per_slot and L._use_seqsharded_decode(ctx, cfg, x, cache):
@@ -404,7 +443,7 @@ def _attention_with_qdelta(ctx, cfg, p, x, q_delta, cos, sin, *,
 
 
 def _zamba_forward(ctx, cfg, params, h, cos, sin, *, cache=None,
-                   cache_index=None):
+                   cache_index=None, block_tables=None):
     n_super, per, trailing = zamba_structure(cfg)
     emb0 = h
     aux = jnp.zeros((), jnp.float32)
@@ -421,7 +460,8 @@ def _zamba_forward(ctx, cfg, params, h, cos, sin, *, cache=None,
         kv_i = (jax.tree.map(lambda a: a[i], kv_shared)
                 if kv_shared is not None else None)
         h, nkv = _shared_block(ctx, cfg, params["shared"], i, h, emb0,
-                               cos, sin, cache=kv_i, cache_index=cache_index)
+                               cos, sin, cache=kv_i, cache_index=cache_index,
+                               block_tables=block_tables)
         if nkv is not None:
             new_kv.append(nkv)
     if trailing:
@@ -481,6 +521,52 @@ def init_cache(ctx: L.Ctx, cfg: ModelConfig, batch: int, max_seq: int,
         n_super, _, _ = zamba_structure(cfg)
         return {"mamba": ms(cfg, batch, c, layers=cfg.n_layers),
                 "kv_shared": kv(cfg, batch, max_seq, c, layers=n_super)}
+    raise ValueError(f"{cfg.family} has no decode cache (encoder-only)")
+
+
+def init_paged_cache(ctx: L.Ctx, cfg: ModelConfig, batch: int, max_seq: int,
+                     block_size: int, n_blocks: int | None = None,
+                     abstract: bool = False):
+    """Paged decode-state pytree: every rows-key becomes a block POOL
+    (layers, n_blocks, block_size, K, hd) shared by all slots, plus one
+    top-level ``block_tables`` ((batch, max_seq // block_size) int32)
+    mapping each slot's logical row range to pool blocks.  State keys
+    (recurrent Mamba lanes) are not row-addressable and stay dense.
+
+    Tables init to zero: an unmapped entry aliases block 0, which is
+    harmless — reads past kv_len are masked and writes never target
+    unmapped entries (the allocator maps blocks before the cursor reaches
+    them).  ``n_blocks`` defaults to ``batch * max_blocks`` (capacity
+    parity with the dense cache; pass less to oversubscribe)."""
+    if max_seq % block_size:
+        raise ValueError(f"max_seq {max_seq} must be a multiple of "
+                         f"block_size {block_size}")
+    if cfg.family == "ssm":
+        raise ValueError("ssm caches have no sequence rows to page")
+    c = ctx.cdtype
+    max_blocks = max_seq // block_size
+    if n_blocks is None:
+        n_blocks = batch * max_blocks
+    pkv = L.abstract_paged_kv_cache if abstract else L.empty_paged_kv_cache
+    ms = L.abstract_mamba_state if abstract else L.empty_mamba_state
+    tab_shape = (batch, max_blocks)
+    table = (jax.ShapeDtypeStruct(tab_shape, jnp.int32) if abstract
+             else jnp.zeros(tab_shape, jnp.int32))
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.layer_pattern == "local_global":
+            half = cfg.n_layers // 2
+            return {"kv_local": pkv(cfg, n_blocks, block_size, c, layers=half),
+                    "kv_global": pkv(cfg, n_blocks, block_size, c,
+                                     layers=half),
+                    "block_tables": table}
+        return {"kv": pkv(cfg, n_blocks, block_size, c, layers=cfg.n_layers),
+                "block_tables": table}
+    if cfg.family == "hybrid":
+        n_super, _, _ = zamba_structure(cfg)
+        return {"mamba": ms(cfg, batch, c, layers=cfg.n_layers),
+                "kv_shared": pkv(cfg, n_blocks, block_size, c,
+                                 layers=n_super),
+                "block_tables": table}
     raise ValueError(f"{cfg.family} has no decode cache (encoder-only)")
 
 
@@ -593,7 +679,8 @@ def int8_payload_ratio(cfg: ModelConfig, itemsize: int = 2) -> float:
 
 
 def export_slot(cfg: ModelConfig, cache, slot: int, kv_len: int,
-                mode: str = "reference", quantize: bool = False) -> dict:
+                mode: str = "reference", quantize: bool = False,
+                row_start: int = 0) -> dict:
     """Lift slot ``slot``'s state out of a batched decode cache.
 
     Returns a payload pytree mirroring the cache structure with the batch
@@ -605,10 +692,22 @@ def export_slot(cfg: ModelConfig, cache, slot: int, kv_len: int,
 
     ``quantize=True`` compresses the payload at rest (``quantize_payload``:
     per-row int8 + f32 scale, roughly halving the on-wire bytes at a
-    bounded parity cost); ``import_slot`` dequantizes transparently."""
+    bounded parity cost); ``import_slot`` dequantizes transparently.
+
+    ``row_start > 0`` ships only rows [row_start, kv_len) — the PRIVATE
+    suffix of a prefix-shared slot.  The receiver rebuilds the leading
+    rows (registry hit or re-prefill of the prompt prefix, exact by the
+    chunked-prefill invariance: row p depends only on tokens <= p) and
+    installs the payload at ``row_offset=row_start``.  Only valid for
+    pure-rows schemas: a state lane encodes the WHOLE left context and
+    cannot be split at a row boundary."""
     if kv_len < 0:
         raise ValueError(f"kv_len must be >= 0, got {kv_len}")
+    if not 0 <= row_start <= kv_len:
+        raise ValueError(f"row_start {row_start} outside [0, {kv_len}]")
     spec = cache_slot_spec(cfg)
+    if row_start and any(k == SLOT_STATE for k in spec.values()):
+        raise ValueError("row_start > 0 requires a pure-rows cache schema")
     if set(spec) != set(cache):
         raise ValueError(f"cache keys {sorted(cache)} do not match the "
                          f"slot schema {sorted(spec)}")
@@ -621,13 +720,13 @@ def export_slot(cfg: ModelConfig, cache, slot: int, kv_len: int,
             if any(kv_len > a.shape[1] for a in jax.tree.leaves(lane)):
                 raise ValueError(f"kv_len {kv_len} exceeds the cache rows "
                                  f"of {key}")
-            lane = jax.tree.map(lambda a: a[:, :kv_len], lane)
+            lane = jax.tree.map(lambda a: a[:, row_start:kv_len], lane)
         payload[key] = lane
     return quantize_payload(payload) if quantize else payload
 
 
 def import_slot(cfg: ModelConfig, cache, payload, slot: int,
-                mode: str = "reference"):
+                mode: str = "reference", row_offset: int = 0):
     """Install an ``export_slot`` payload into slot ``slot`` of ``cache``.
 
     "rows" leaves are zero-padded to the destination's ``max_seq`` and
@@ -637,9 +736,16 @@ def import_slot(cfg: ModelConfig, cache, payload, slot: int,
     size and any ``max_seq`` >= the payload's kv_len.  Quantized payloads
     (``export_slot(..., quantize=True)``) are dequantized here — at
     install time, so the payload stays int8 at rest and on the wire.
-    Returns the updated cache."""
+
+    ``row_offset > 0`` installs a prefix-trimmed payload
+    (``export_slot(..., row_start=...)``) at its original position.  The
+    lane rows BELOW the offset are zeroed by the whole-lane overwrite, so
+    the prefix must be rebuilt (re-prefilled) AFTER this call.  Returns
+    the updated cache."""
     payload = dequantize_payload(payload)
     spec = cache_slot_spec(cfg)
+    if row_offset and any(k == SLOT_STATE for k in spec.values()):
+        raise ValueError("row_offset > 0 requires a pure-rows cache schema")
     if set(spec) != set(payload) or set(spec) != set(cache):
         raise ValueError(f"payload keys {sorted(payload)} do not match the "
                          f"slot schema {sorted(spec)}")
@@ -654,12 +760,13 @@ def import_slot(cfg: ModelConfig, cache, payload, slot: int,
                     raise ValueError(
                         f"{key}: payload lane {a.shape} does not fit "
                         f"cache {full.shape}")
-                if a.shape[1] > rows:
+                if row_offset + a.shape[1] > rows:
                     raise ValueError(
-                        f"{key}: payload carries {a.shape[1]} rows but the "
-                        f"destination cache holds only {rows}")
+                        f"{key}: payload carries rows up to "
+                        f"{row_offset + a.shape[1]} but the destination "
+                        f"cache holds only {rows}")
                 pad = [(0, 0)] * a.ndim
-                pad[1] = (0, rows - a.shape[1])
+                pad[1] = (row_offset, rows - row_offset - a.shape[1])
                 return jnp.pad(jnp.asarray(a), pad)
             sub = jax.tree.map(pad_rows, sub, dst)
         else:
@@ -674,6 +781,92 @@ def import_slot(cfg: ModelConfig, cache, payload, slot: int,
             lambda full, lane: ops.slot_scatter(full, lane, slot, axis=1,
                                                 mode=mode),
             dst, sub)
+    return new_cache
+
+
+def _paged_row_coords(blocks, block_size: int, row_start: int, row_stop: int):
+    """(pool block ids, in-block offsets) int32 vectors addressing logical
+    rows [row_start, row_stop) of a slot whose table maps logical block i
+    to pool block ``blocks[i]`` (host-side list, in logical order)."""
+    rows = range(row_start, row_stop)
+    blk = jnp.asarray([blocks[r // block_size] for r in rows], jnp.int32)
+    off = jnp.asarray([r % block_size for r in rows], jnp.int32)
+    return blk, off
+
+
+def export_slot_paged(cfg: ModelConfig, cache, slot: int, blocks,
+                      block_size: int, kv_len: int, *, row_start: int = 0,
+                      mode: str = "reference", quantize: bool = False):
+    """``export_slot`` for a paged cache: rows-leaves are gathered out of
+    the block pools through the slot's host-side block list, producing the
+    SAME payload schema as the dense exporter — payloads are
+    layout-portable (paged <-> dense migrations round-trip).  One fused
+    gather per leaf (single DMA, same rationale as ``slot_gather``).
+    ``row_start`` ships only the private suffix of a prefix-shared slot."""
+    if not 0 <= row_start <= kv_len:
+        raise ValueError(f"row_start {row_start} outside [0, {kv_len}]")
+    if kv_len > len(blocks) * block_size:
+        raise ValueError(f"kv_len {kv_len} exceeds the {len(blocks)} mapped "
+                         f"blocks of size {block_size}")
+    spec = cache_slot_spec(cfg)
+    if row_start and any(k == SLOT_STATE for k in spec.values()):
+        raise ValueError("row_start > 0 requires a pure-rows cache schema")
+    if set(spec) != set(cache) - {"block_tables"}:
+        raise ValueError(f"cache keys {sorted(cache)} do not match the "
+                         f"slot schema {sorted(spec)}")
+    blk, off = _paged_row_coords(blocks, block_size, row_start, kv_len)
+    payload = {}
+    for key, kind in spec.items():
+        if kind == SLOT_STATE:
+            payload[key] = jax.tree.map(
+                lambda a: ops.slot_gather(a, slot, axis=1, mode=mode),
+                cache[key])
+        else:
+            payload[key] = jax.tree.map(lambda a: a[:, blk, off], cache[key])
+    return quantize_payload(payload) if quantize else payload
+
+
+def import_slot_paged(cfg: ModelConfig, cache, payload, slot: int, blocks,
+                      block_size: int, *, row_offset: int = 0,
+                      mode: str = "reference"):
+    """Install an ``export_slot``/``export_slot_paged`` payload into a
+    paged cache: rows scatter to the (block, offset) rows the slot's block
+    list maps [row_offset, row_offset + rows) to.  Unlike the dense
+    importer this writes ONLY the payload rows — shared prefix blocks
+    below ``row_offset`` are never touched (they may be mapped into other
+    slots' tables).  Returns the updated cache."""
+    payload = dequantize_payload(payload)
+    spec = cache_slot_spec(cfg)
+    if row_offset and any(k == SLOT_STATE for k in spec.values()):
+        raise ValueError("row_offset > 0 requires a pure-rows cache schema")
+    if set(spec) != set(payload):
+        raise ValueError(f"payload keys {sorted(payload)} do not match the "
+                         f"slot schema {sorted(spec)}")
+    new_cache = dict(cache)
+    for key, kind in spec.items():
+        if kind == SLOT_STATE:
+            new_cache[key] = jax.tree.map(
+                lambda full, lane: ops.slot_scatter(
+                    full, jnp.asarray(lane), slot, axis=1, mode=mode),
+                cache[key], payload[key])
+            continue
+        rows = jax.tree.leaves(payload[key])[0].shape[1]
+        if row_offset + rows > len(blocks) * block_size:
+            raise ValueError(
+                f"{key}: payload rows reach {row_offset + rows} but only "
+                f"{len(blocks)} blocks of size {block_size} are mapped")
+        blk, off = _paged_row_coords(blocks, block_size, row_offset,
+                                     row_offset + rows)
+
+        def scatter_rows(full, lane):
+            if (lane.shape[0] != full.shape[0]
+                    or lane.shape[2:] != full.shape[3:]):
+                raise ValueError(f"{key}: payload lane {lane.shape} does "
+                                 f"not fit pool {full.shape}")
+            return full.at[:, blk, off].set(
+                jnp.asarray(lane).astype(full.dtype))
+
+        new_cache[key] = jax.tree.map(scatter_rows, cache[key], payload[key])
     return new_cache
 
 

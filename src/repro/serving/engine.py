@@ -43,12 +43,14 @@ from repro.core.tasks import Task
 from repro.models import lm
 from repro.models.layers import Ctx
 from repro.obs.tracer import NULL_TRACER
-from repro.serving.scheduler import (Request, SlotScheduler, chunk_plan,
+from repro.serving.scheduler import (BlockAllocator, PrefixRegistry, Request,
+                                     SlotScheduler, chunk_plan,
                                      fewest_remaining)
 
 __all__ = ["Request", "ServeEngine", "SlotSnapshot", "serve_phase_tasks",
            "fewest_remaining", "make_prefill_step", "make_decode_step",
-           "make_prefill_chunk_step", "make_decode_chunk_step"]
+           "make_prefill_chunk_step", "make_prefill_chunk_step_paged",
+           "make_decode_chunk_step", "BlockAllocator", "PrefixRegistry"]
 
 
 def serve_phase_tasks(cfg: ModelConfig, batch: int, prompt: int,
@@ -148,6 +150,42 @@ def make_prefill_chunk_step(cfg: ModelConfig, run: RunConfig, ctx: Ctx):
     return prefill_chunk
 
 
+def make_prefill_chunk_step_paged(cfg: ModelConfig, run: RunConfig, ctx: Ctx):
+    """Paged-cache variant of ``make_prefill_chunk_step``.
+
+    Block pools have no batch axis, so the dense slice-lane/merge-lane
+    trick cannot isolate one slot.  Instead the pools are passed WHOLE
+    with only the slot's block-table row (and, for hybrids, its recurrent
+    state lane): the paged scatter writes exclusively into blocks that
+    row maps, so every other slot's blocks are untouched — the same
+    isolation, enforced by block ownership instead of lane slicing."""
+    spec = lm.cache_slot_spec(cfg)
+
+    def prefill_chunk(params, cache, tokens, slot, index):
+        sub = {}
+        for key, leaf in cache.items():
+            if key == "block_tables":
+                sub[key] = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=0)
+            elif spec.get(key) == lm.SLOT_STATE:
+                sub[key] = _slice_slot(leaf, slot)
+            else:
+                sub[key] = leaf                     # pool: passed whole
+        h, _, new_sub = lm.forward(ctx, cfg, params, {"tokens": tokens},
+                                   cache=sub, cache_index=index)
+        logits = lm.logits_for(ctx, cfg, params, h[:, -1:, :])
+        out = {}
+        for key in cache:
+            if key == "block_tables":
+                out[key] = cache[key]               # table rows are host-set
+            elif spec.get(key) == lm.SLOT_STATE:
+                out[key] = _merge_slot(cache[key], new_sub[key], slot)
+            else:
+                out[key] = new_sub[key]
+        return out, logits[:, 0]
+
+    return prefill_chunk
+
+
 def make_decode_chunk_step(cfg: ModelConfig, run: RunConfig, ctx: Ctx,
                            chunk: int, max_seq: int):
     """decode_chunk(params, cache, cur, index, rem, done) ->
@@ -234,6 +272,12 @@ class SlotSnapshot:
     kv_len: int = 0
     cur: int | None = None
     payload: dict | None = None
+    #: Leading rows NOT in the payload (a prefix-shared slot ships only
+    #: its private suffix).  The restoring engine rebuilds rows
+    #: [0, prefix_len) from its own prefix registry — or, on a miss /
+    #: dense engine, by re-prefilling ``request.prompt[:prefix_len]`` —
+    #: BEFORE arming the cursor.  0 = self-contained payload.
+    prefix_len: int = 0
 
     @property
     def warm(self) -> bool:
@@ -295,13 +339,27 @@ class ServeEngine:
     ``payload_bytes`` at a bounded parity cost (restores are then no
     longer bit-exact; the per-leaf error budget is documented in
     docs/fleet.md).
+
+    ``paged=True`` swaps the dense per-slot cache for a refcounted block
+    pool (``block_size`` rows per block, ``n_blocks`` blocks; default =
+    dense capacity).  Every slot reserves its blocks UP FRONT at
+    admission (prompt + max_new_tokens rows), so a running request can
+    never be killed by pool exhaustion — admission is gated instead
+    (FCFS, via the scheduler's ``can_admit`` hook).  Token streams are
+    bit-identical to the dense engine.  ``prefix_sharing=True``
+    additionally registers each request's ``prefix_len`` leading rows
+    after prefill; later admissions whose prompts start with the same
+    tokens map the cached blocks (copy-on-write on the partial tail
+    block) and skip prefilling them — see docs/serving.md.
     """
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, ctx: Ctx, params,
                  batch_size: int = 4, max_seq: int = 256, power=None,
                  prefill_chunk: int = 32, decode_chunk: int = 8,
                  snapshot_int8: bool = False, victim_policy=None,
-                 tracer=None, trace_track: str = "engine"):
+                 tracer=None, trace_track: str = "engine",
+                 paged: bool = False, block_size: int = 16,
+                 n_blocks: int | None = None, prefix_sharing: bool = False):
         if cfg.family == "audio":
             raise ValueError("encoder-only arch has no decode path")
         prefill_chunk = min(prefill_chunk, max_seq)
@@ -310,6 +368,20 @@ class ServeEngine:
                              f"got {prefill_chunk}")
         if decode_chunk < 1:
             raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
+        if prefix_sharing and not paged:
+            raise ValueError("prefix_sharing requires paged=True")
+        if paged:
+            if cfg.family == "ssm":
+                raise ValueError("ssm caches have no sequence rows to page")
+            if max_seq % block_size:
+                raise ValueError(f"max_seq {max_seq} must be a multiple of "
+                                 f"block_size {block_size}")
+            if prefix_sharing and any(
+                    kind == lm.SLOT_STATE
+                    for kind in lm.cache_slot_spec(cfg).values()):
+                raise ValueError(
+                    "prefix_sharing requires a pure-rows cache schema "
+                    "(recurrent state cannot be row-shared)")
         self.cfg, self.run, self.ctx = cfg, run, ctx
         self.params = params
         self.batch_size, self.max_seq = batch_size, max_seq
@@ -318,6 +390,15 @@ class ServeEngine:
         self.decode_chunk = decode_chunk
         self.snapshot_int8 = snapshot_int8
         self.victim_policy = victim_policy or fewest_remaining
+        self.paged, self.block_size = paged, block_size
+        self.prefix_sharing = prefix_sharing
+        self.max_blocks = max_seq // block_size if paged else 0
+        self.n_blocks = (n_blocks if n_blocks is not None
+                         else batch_size * self.max_blocks) if paged else 0
+        # paged-mode counters (monotonic across drain/restore cycles)
+        self.prefill_tokens_skipped = 0
+        self.cow_copies = 0
+        self.peak_used_blocks = 0
         # observability: spans/instants on a modeled virtual timebase
         # (``_vt`` advances by the modeled chunk runtime when a power
         # session is attached, by 1.0 per phase otherwise); default
@@ -327,12 +408,30 @@ class ServeEngine:
         self._vt = 0.0
         # jit caches one program per (1, chunk_size) token shape — the
         # chunk_plan power-of-two sizes bound the trace count
-        self._prefill_step = jax.jit(make_prefill_chunk_step(cfg, run, ctx))
+        mk = make_prefill_chunk_step_paged if paged else make_prefill_chunk_step
+        self._prefill_step = jax.jit(mk(cfg, run, ctx))
         self._decode_fn = jax.jit(
             make_decode_chunk_step(cfg, run, ctx, decode_chunk, max_seq))
         self._admit_fn = jax.jit(_admit_step)
         self._install_fn = jax.jit(_install_step)
         self._reset_fn = jax.jit(_reset_mamba_slot)
+        if paged:
+            rows_keys = [k for k, v in lm.cache_slot_spec(cfg).items()
+                         if v == lm.SLOT_ROWS]
+
+            def set_table_row(table, row, sid):
+                return table.at[sid].set(row)
+
+            def copy_block(cache, src, dst):
+                # CoW: duplicate pool block src -> dst in every rows-leaf
+                out = dict(cache)
+                for key in rows_keys:
+                    out[key] = jax.tree.map(
+                        lambda a: a.at[:, dst].set(a[:, src]), cache[key])
+                return out
+
+            self._table_fn = jax.jit(set_table_row)
+            self._copy_fn = jax.jit(copy_block)
         # warm snapshots awaiting a free slot (restored ahead of fresh
         # admissions — they carry finished work)
         self._restore_q: deque[SlotSnapshot] = deque()
@@ -351,18 +450,143 @@ class ServeEngine:
             return contextlib.nullcontext()
         return self.power.phase(name, calls=calls)
 
+    def _prefill_rows(self, tokens, sid: int, idx0: int):
+        """Chunked prefill of ``tokens`` into rows [idx0, idx0 + len) of
+        slot ``sid`` (mutates ``self._cache``); returns the last-token
+        logits (1, V).  ``idx0 > 0`` is the prefix-shared suffix prefill
+        and the restore-path prefix rebuild."""
+        idx, logits = idx0, None
+        for size in chunk_plan(len(tokens), self.prefill_chunk):
+            o = idx - idx0
+            toks = jnp.asarray([tokens[o:o + size]], jnp.int32)
+            self._cache, logits = self._prefill_step(
+                self.params, self._cache, toks, sid, idx)
+            idx += size
+        return logits
+
     def _prefill_into_slot(self, cache, req: Request, sid: int):
         """Chunked prefill of one request into slot ``sid``; returns the
         updated cache and the last-token logits (1, V)."""
         if "mamba" in cache:    # recurrent state carries across requests
             cache = self._reset_fn(cache, sid)
-        idx, logits = 0, None
-        for size in chunk_plan(len(req.prompt), self.prefill_chunk):
-            toks = jnp.asarray([req.prompt[idx:idx + size]], jnp.int32)
-            cache, logits = self._prefill_step(
-                self.params, cache, toks, sid, idx)
-            idx += size
-        return cache, logits
+        self._cache = cache
+        logits = self._prefill_rows(req.prompt, sid, 0)
+        return self._cache, logits
+
+    # -- paged-mode block bookkeeping --------------------------------------
+
+    def _shared_credit(self, prompt, prefix_cap: int) -> int:
+        """Rows a registry hit would supply for ``prompt`` right now —
+        side-effect-free (the admission gate's capacity estimate)."""
+        if self._registry is None or prefix_cap <= 0:
+            return 0
+        rows, _ = self._registry.lookup(prompt, prefix_cap, peek=True)
+        return rows
+
+    def _fits_blocks(self, prompt, total_rows: int, prefix_cap: int) -> bool:
+        """Whether the pool can cover a ``total_rows``-row reservation for
+        ``prompt`` — counting full shared prefix blocks as free credit and
+        evicting LRU registry prefixes when the free list falls short."""
+        need_full = self._alloc.blocks_for(total_rows)
+        credit = self._shared_credit(prompt, prefix_cap) // self.block_size
+        if self._alloc.free_blocks >= need_full - credit:
+            return True
+        if self._registry is not None:
+            # eviction may drop the very prefix the credit counted on —
+            # re-probe after, never before, trusting the stale credit
+            self._registry.evict_for(need_full)
+            credit = self._shared_credit(prompt, prefix_cap) \
+                // self.block_size
+        return self._alloc.free_blocks >= need_full - credit
+
+    def _can_admit(self, req: Request) -> bool:
+        return self._fits_blocks(
+            req.prompt, len(req.prompt) + req.max_new_tokens,
+            min(req.prefix_len, len(req.prompt) - 1))
+
+    def _map_slot_blocks(self, sid: int, total_rows: int, shared_rows: int,
+                         shared_blocks) -> list[int]:
+        """Reserve and table-map slot ``sid``'s blocks for a
+        ``total_rows``-row lifetime: full shared prefix blocks are
+        reference-mapped, a partially-shared tail block is copy-on-write
+        duplicated (its first write — the suffix prefill — is imminent),
+        and the remainder is allocated fresh.  Returns the logical-order
+        block list (also recorded in ``_slot_blocks``)."""
+        bs = self.block_size
+        full = shared_rows // bs
+        blocks: list[int] = []
+        if shared_rows:
+            self._alloc.share(shared_blocks[:full])
+            blocks += shared_blocks[:full]
+            if shared_rows % bs:
+                tail = shared_blocks[full]
+                self._alloc.share([tail])           # our reference...
+                priv, copied = self._alloc.ensure_private(tail)  # ...pivots
+                if copied:
+                    self._cache = self._copy_fn(
+                        self._cache, jnp.asarray(tail, jnp.int32),
+                        jnp.asarray(priv, jnp.int32))
+                    self.cow_copies += 1
+                blocks.append(priv)
+        blocks += self._alloc.alloc(
+            self._alloc.blocks_for(total_rows) - len(blocks))
+        self._slot_blocks[sid] = blocks
+        self._slot_shared_rows[sid] = shared_rows
+        row = jnp.asarray(
+            blocks + [self._parking] * (self.max_blocks - len(blocks)),
+            jnp.int32)
+        self._cache = dict(self._cache, block_tables=self._table_fn(
+            self._cache["block_tables"], row, jnp.asarray(sid, jnp.int32)))
+        self.peak_used_blocks = max(self.peak_used_blocks,
+                                    self._alloc.used_blocks)
+        return blocks
+
+    def _release_slot_blocks(self, sid: int) -> None:
+        """Return slot ``sid``'s block references to the pool and park its
+        table row (shared prefix blocks survive via their other holders)."""
+        blocks = self._slot_blocks.pop(sid, None)
+        if blocks is None:
+            return
+        self._alloc.release(blocks)
+        self._slot_shared_rows.pop(sid, None)
+        self._cache = dict(self._cache, block_tables=self._table_fn(
+            self._cache["block_tables"], self._parking_row,
+            jnp.asarray(sid, jnp.int32)))
+
+    def _admit_paged(self, req: Request, sid: int):
+        """Paged admission: map blocks (sharing any registered prefix),
+        prefill only the unshared suffix, then register the prefix for
+        later admissions.  Returns the last-token logits (1, V)."""
+        plen = len(req.prompt)
+        cap = min(req.prefix_len, plen - 1)   # >= 1 suffix token ALWAYS
+        shared_rows, shared_blocks = 0, []
+        if self._registry is not None and cap > 0:
+            shared_rows, shared_blocks = self._registry.lookup(
+                req.prompt, cap)
+        blocks = self._map_slot_blocks(sid, plen + req.max_new_tokens,
+                                       shared_rows, shared_blocks)
+        if "mamba" in self._cache:
+            self._cache = self._reset_fn(self._cache, sid)
+        logits = self._prefill_rows(req.prompt[shared_rows:],
+                                    sid, shared_rows)
+        self.prefill_tokens_skipped += shared_rows
+        if self._registry is not None and cap > 0:
+            self._registry.register(req.prompt, cap,
+                                    blocks[:self._alloc.blocks_for(cap)])
+        return logits
+
+    def capacity_hint(self, rows: int) -> int:
+        """Admissions of ``rows``-row requests this engine could take
+        right now: free slots under the occupancy limit AND — paged —
+        block-pool headroom.  The fleet scheduler reads this instead of
+        raw slot arithmetic so placement respects pool pressure."""
+        room = self.slot_limit - self.active_slots
+        if not self.paged:
+            return max(0, room)
+        per = max(1, -(-max(rows, 1) // self.block_size))
+        if getattr(self, "_alloc", None) is None:      # stream not up yet
+            return max(0, min(room, self.n_blocks // per))
+        return max(0, min(room, self._alloc.free_blocks // per))
 
     # -- serving loop ------------------------------------------------------
     #
@@ -382,7 +606,29 @@ class ServeEngine:
         self._sched = SlotScheduler(self.batch_size)
         self._sched.set_limit(self._slot_limit)
         B = self.batch_size
-        self._cache = lm.init_cache(self.ctx, self.cfg, B, self.max_seq)
+        if self.paged:
+            # pool holds one PARKING block beyond the allocator's arena:
+            # unmapped/released table entries point at it, never at an
+            # allocatable block.  (Inside one scatter-kernel call a
+            # retired lane still copies its mapped blocks through to the
+            # aliased output; parking that lane on an unallocatable block
+            # keeps the copy-through off blocks a later owner writes.)
+            self._parking = self.n_blocks
+            self._cache = lm.init_paged_cache(
+                self.ctx, self.cfg, B, self.max_seq, self.block_size,
+                n_blocks=self.n_blocks + 1)
+            self._parking_row = jnp.full((self.max_blocks,), self._parking,
+                                         jnp.int32)
+            self._cache["block_tables"] = jnp.broadcast_to(
+                self._parking_row, (B, self.max_blocks))
+            self._alloc = BlockAllocator(self.n_blocks, self.block_size)
+            self._registry = (PrefixRegistry(self._alloc)
+                              if self.prefix_sharing else None)
+            self._slot_blocks: dict[int, list[int]] = {}
+            self._slot_shared_rows: dict[int, int] = {}
+        else:
+            self._cache = lm.init_cache(self.ctx, self.cfg, B, self.max_seq)
+            self._alloc = self._registry = None
         self._cur = jnp.zeros((B,), jnp.int32)
         self._index = jnp.zeros((B,), jnp.int32)
         self._rem = jnp.zeros((B,), jnp.int32)
@@ -392,18 +638,30 @@ class ServeEngine:
         if not hasattr(self, "finished"):
             self.finished: list[Request] = []
 
+    def _validate_requests(self, requests) -> None:
+        """Reject unservable requests before any device work: rows beyond
+        ``max_seq``, or (paged) a lifetime block reservation no empty pool
+        could ever cover — which would deadlock the FCFS admission gate."""
+        for req in requests:
+            total = len(req.prompt) + req.max_new_tokens
+            if total > self.max_seq:
+                raise ValueError(
+                    f"request {req.uid}: prompt {len(req.prompt)} + "
+                    f"max_new_tokens {req.max_new_tokens} exceeds "
+                    f"max_seq {self.max_seq}")
+            if self.paged and -(-total // self.block_size) > self.n_blocks:
+                raise ValueError(
+                    f"request {req.uid}: needs "
+                    f"{-(-total // self.block_size)} blocks but the pool "
+                    f"holds {self.n_blocks}")
+
     def start(self, requests: list[Request]) -> None:
         """Install a FRESH request stream (any previous stream state is
         reset).  Steps are then driven by ``step()`` until ``pending`` is
         False.  To continue drained work instead, use ``restore``."""
         # validate up front: one oversize request must not abort the call
         # after other requests already burned device work
-        for req in requests:
-            if len(req.prompt) + req.max_new_tokens > self.max_seq:
-                raise ValueError(
-                    f"request {req.uid}: prompt {len(req.prompt)} + "
-                    f"max_new_tokens {req.max_new_tokens} exceeds "
-                    f"max_seq {self.max_seq}")
+        self._validate_requests(requests)
         self._sched = None
         self._restore_q.clear()
         self.finished = []
@@ -420,12 +678,7 @@ class ServeEngine:
         earlier requests are still decoding).  Brings the stream up if
         none is active; oversize requests are rejected up front, same
         as ``start``."""
-        for req in requests:
-            if len(req.prompt) + req.max_new_tokens > self.max_seq:
-                raise ValueError(
-                    f"request {req.uid}: prompt {len(req.prompt)} + "
-                    f"max_new_tokens {req.max_new_tokens} exceeds "
-                    f"max_seq {self.max_seq}")
+        self._validate_requests(requests)
         self._ensure_stream()
         self._sched.submit(requests)
         if self.tracer.enabled:
@@ -457,21 +710,38 @@ class ServeEngine:
         cur, index, rem = self._fetch(
             (self._cur, self._index, self._rem))
         # sync 2: every slot's payload in ONE stacked transfer (quantized
-        # on device first when snapshot_int8 — half the bytes cross)
-        payloads = self._fetch([
-            lm.export_slot(self.cfg, self._cache, slot.sid,
-                           int(index[slot.sid]),
-                           quantize=self.snapshot_int8)
-            for slot in chosen])
+        # on device first when snapshot_int8 — half the bytes cross).
+        # Paged slots ship only rows [shared, kv_len): the shared prefix
+        # is rebuildable at the destination (registry hit or re-prefill),
+        # so prefix sharing also shrinks migrations.
+        payloads = self._fetch([self._export_payload(slot.sid,
+                                                     int(index[slot.sid]))
+                                for slot in chosen])
         self.sync_count += 2
         snaps = []
         for slot, payload in zip(list(chosen), payloads):
+            sid = slot.sid
             snaps.append(SlotSnapshot(
-                request=slot.request, rem=int(rem[slot.sid]),
-                kv_len=int(index[slot.sid]), cur=int(cur[slot.sid]),
-                payload=payload))
+                request=slot.request, rem=int(rem[sid]),
+                kv_len=int(index[sid]), cur=int(cur[sid]), payload=payload,
+                prefix_len=(self._slot_shared_rows.get(sid, 0)
+                            if self.paged else 0)))
             sched.release(slot)
+            if self.paged:
+                self._release_slot_blocks(sid)
         return snaps
+
+    def _export_payload(self, sid: int, kv_len: int):
+        """One slot's (device-side) snapshot payload — dense or paged;
+        identical schema either way, so payloads are layout-portable."""
+        if not self.paged:
+            return lm.export_slot(self.cfg, self._cache, sid, kv_len,
+                                  quantize=self.snapshot_int8)
+        return lm.export_slot_paged(
+            self.cfg, self._cache, sid, self._slot_blocks[sid],
+            self.block_size, kv_len,
+            row_start=self._slot_shared_rows.get(sid, 0),
+            quantize=self.snapshot_int8)
 
     def select_victims(self, n: int) -> list[int]:
         """Slot ids of the ``n`` partial-drain victims the engine's
@@ -538,6 +808,7 @@ class ServeEngine:
                      for req in sched.queue)
         self._sched = None          # stream torn down; cache freed
         self._cache = None
+        self._alloc = self._registry = None   # pool (and cached prefixes) die
         return snaps
 
     def checkpoint(self) -> list[SlotSnapshot]:
@@ -558,21 +829,22 @@ class ServeEngine:
         if active:
             cur, index, rem = self._fetch(
                 (self._cur, self._index, self._rem))
-            payloads = self._fetch([
-                lm.export_slot(self.cfg, self._cache, slot.sid,
-                               int(index[slot.sid]),
-                               quantize=self.snapshot_int8)
-                for slot in active])
+            payloads = self._fetch([self._export_payload(slot.sid,
+                                                         int(index[slot.sid]))
+                                    for slot in active])
             self.sync_count += 2
             for slot, payload in zip(active, payloads):
+                sid = slot.sid
                 snaps.append(SlotSnapshot(
-                    request=slot.request.clone(), rem=int(rem[slot.sid]),
-                    kv_len=int(index[slot.sid]), cur=int(cur[slot.sid]),
-                    payload=payload))
+                    request=slot.request.clone(), rem=int(rem[sid]),
+                    kv_len=int(index[sid]), cur=int(cur[sid]),
+                    payload=payload,
+                    prefix_len=(self._slot_shared_rows.get(sid, 0)
+                                if self.paged else 0)))
         for s in self._restore_q:
             snaps.append(SlotSnapshot(
                 request=s.request.clone(), rem=s.rem, kv_len=s.kv_len,
-                cur=s.cur, payload=s.payload))
+                cur=s.cur, payload=s.payload, prefix_len=s.prefix_len))
         snaps.extend(SlotSnapshot(request=req.clone(),
                                   rem=req.max_new_tokens)
                      for req in sched.queue)
@@ -585,6 +857,7 @@ class ServeEngine:
         left idle and can be restarted with ``start``/``restore``."""
         self._sched = None
         self._cache = None
+        self._alloc = self._registry = None
         self._restore_q.clear()
 
     def restore(self, snaps: list[SlotSnapshot]) -> None:
@@ -600,6 +873,11 @@ class ServeEngine:
                 raise ValueError(
                     f"request {s.request.uid}: snapshot needs {need} cache "
                     f"rows but this engine holds max_seq {self.max_seq}")
+            if self.paged and -(-need // self.block_size) > self.n_blocks:
+                raise ValueError(
+                    f"request {s.request.uid}: snapshot needs "
+                    f"{-(-need // self.block_size)} blocks but the pool "
+                    f"holds {self.n_blocks}")
         self._ensure_stream()
         tr = self.tracer if self.tracer.enabled else None
         for s in snaps:
@@ -621,10 +899,44 @@ class ServeEngine:
 
     def _install_snapshot(self, snap: SlotSnapshot, sid: int) -> None:
         """Write a warm snapshot's cache lane into slot ``sid`` and arm
-        its decode lane at the restored cursor."""
+        its decode lane at the restored cursor.  A ``prefix_len > 0``
+        payload is prefix-trimmed: rows [0, prefix_len) are rebuilt here —
+        from this engine's prefix registry when the tokens are cached
+        (nothing recomputed), else by re-prefilling that prompt span."""
         payload = jax.tree.map(jnp.asarray, snap.payload)
-        self._cache = lm.import_slot(self.cfg, self._cache, payload, sid,
-                                     mode=self.run.kernel_mode)
+        prompt, pfx = snap.request.prompt, snap.prefix_len
+        if self.paged:
+            shared_rows, shared_blocks = 0, []
+            if self._registry is not None and pfx > 0:
+                shared_rows, shared_blocks = self._registry.lookup(
+                    prompt, pfx)
+            blocks = self._map_slot_blocks(sid, snap.kv_len + snap.rem,
+                                           shared_rows, shared_blocks)
+            if "mamba" in self._cache:
+                self._cache = self._reset_fn(self._cache, sid)
+            if shared_rows < pfx:
+                n = len(chunk_plan(pfx - shared_rows, self.prefill_chunk))
+                with self._phase("prefill", calls=n):
+                    self._prefill_rows(prompt[shared_rows:pfx],
+                                       sid, shared_rows)
+            self.prefill_tokens_skipped += shared_rows
+            self._cache = lm.import_slot_paged(
+                self.cfg, self._cache, payload, sid, blocks,
+                self.block_size, row_offset=pfx, mode=self.run.kernel_mode)
+            if self._registry is not None and pfx > 0:
+                self._registry.register(
+                    prompt, pfx, blocks[:self._alloc.blocks_for(pfx)])
+        else:
+            # the dense importer overwrites the WHOLE lane (rows below
+            # row_offset are zeroed), so the prefix re-prefill must come
+            # AFTER the import, not before
+            self._cache = lm.import_slot(self.cfg, self._cache, payload,
+                                         sid, mode=self.run.kernel_mode,
+                                         row_offset=pfx)
+            if pfx > 0:
+                n = len(chunk_plan(pfx, self.prefill_chunk))
+                with self._phase("prefill", calls=n):
+                    self._prefill_rows(prompt[:pfx], sid, 0)
         self._cur, self._index, self._rem, self._done = self._install_fn(
             self._cur, self._index, self._rem, self._done,
             jnp.asarray(snap.cur, jnp.int32), sid, snap.kv_len, snap.rem)
@@ -662,17 +974,34 @@ class ServeEngine:
         # restored slots first: their work is already paid for — a warm
         # snapshot install is a cache write, not a prefill program
         while self._restore_q:
-            slot = sched.occupy(self._restore_q[0].request)
+            snap = self._restore_q[0]
+            if self.paged and not self._fits_blocks(
+                    snap.request.prompt, snap.kv_len + snap.rem,
+                    snap.prefix_len):
+                break               # FCFS: later snapshots wait too
+            slot = sched.occupy(snap.request)
             if slot is None:
                 break
             self._install_snapshot(self._restore_q.popleft(), slot.sid)
         # one phase entry per admitted request = one prefill program
         # run under the prefill cap (back-to-back entries coalesce the
         # cap write; the modeled measurement accounts each prefill)
-        for slot in sched.admit_ready():
-            with self._phase("prefill") as rec:
-                self._cache, logits = self._prefill_into_slot(
-                    self._cache, slot.request, slot.sid)
+        can_admit = self._can_admit if self.paged else None
+        for slot in sched.admit_ready(can_admit=can_admit):
+            req = slot.request
+            plen = len(req.prompt)
+            # phase cost in CHUNK PROGRAMS actually run: a shared prefix
+            # skips its chunks, a long prompt costs more than a short one
+            skip = self._shared_credit(
+                req.prompt, min(req.prefix_len, plen - 1)) if self.paged \
+                else 0
+            n_calls = len(chunk_plan(plen - skip, self.prefill_chunk))
+            with self._phase("prefill", calls=n_calls) as rec:
+                if self.paged:
+                    logits = self._admit_paged(req, slot.sid)
+                else:
+                    self._cache, logits = self._prefill_into_slot(
+                        self._cache, req, slot.sid)
             self._cur, self._index, self._rem, self._done = self._admit_fn(
                 self._cur, self._index, self._rem, self._done, logits,
                 slot.sid, len(slot.request.prompt),
@@ -715,6 +1044,8 @@ class ServeEngine:
             if slot.emitted >= slot.request.max_new_tokens:
                 self.completion_s[slot.request.uid] = now
                 newly.append(sched.release(slot))
+                if self.paged:
+                    self._release_slot_blocks(slot.sid)
         self.finished.extend(newly)
         return newly
 

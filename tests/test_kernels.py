@@ -7,8 +7,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import (cache_update, flash_attention,
-                                           flash_decode)
+from repro.kernels.flash_attention import (cache_update, cache_update_paged,
+                                           flash_attention, flash_decode,
+                                           flash_decode_paged)
 from repro.kernels.grouped_matmul import grouped_matmul
 from repro.kernels.ssd import ssd
 
@@ -140,6 +141,99 @@ def test_cache_update_per_slot_offsets(idx):
     index = jnp.array(idx, jnp.int32)
     got_k, got_v = cache_update(kc, vc, kn, vn, index, interpret=True)
     exp_k, exp_v = ref.kv_cache_update_ref(kc, vc, kn, vn, index)
+    np.testing.assert_array_equal(got_k, exp_k)
+    np.testing.assert_array_equal(got_v, exp_v)
+
+
+def _paged_pools(n_blocks, bs, K, D, B, max_blocks, seed=7):
+    """Pool pair + a block table scattering each slot's logical blocks
+    across the pool in interleaved (non-contiguous) order."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    k_pool = jax.random.normal(ks[0], (n_blocks, bs, K, D))
+    v_pool = jax.random.normal(ks[1], (n_blocks, bs, K, D))
+    perm = jax.random.permutation(ks[2], n_blocks)[:B * max_blocks]
+    tables = perm.reshape(max_blocks, B).T.astype(jnp.int32)
+    return k_pool, v_pool, tables
+
+
+@pytest.mark.parametrize("lens,Sq", [([5, 16, 31], 1), ([9, 20, 27], 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_paged_matches_oracle(lens, Sq, dtype):
+    """Paged decode/chunked-prefill attention over scattered pool blocks
+    matches the gather-then-dense oracle for ragged kv_len."""
+    B, max_blocks, bs, H, K, D = len(lens), 4, 8, 4, 2, 32
+    k_pool, v_pool, tables = _paged_pools(16, bs, K, D, B, max_blocks)
+    k_pool, v_pool = k_pool.astype(dtype), v_pool.astype(dtype)
+    q = jax.random.normal(KEY, (B, Sq, H, D), jnp.float32).astype(dtype)
+    kv_len = jnp.array(lens, jnp.int32)
+    out = flash_decode_paged(q, k_pool, v_pool, kv_len, tables,
+                             interpret=True)
+    exp = ref.decode_attention_paged_ref(q, k_pool, v_pool, kv_len, tables)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               exp.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+def test_flash_decode_paged_equals_dense_layout():
+    """The paged kernel over a scattered pool equals the DENSE kernel
+    over the gathered cache — paging is a pure layout change."""
+    B, max_blocks, bs, H, K, D = 2, 4, 8, 4, 2, 32
+    k_pool, v_pool, tables = _paged_pools(12, bs, K, D, B, max_blocks)
+    q = jax.random.normal(KEY, (B, 1, H, D))
+    kv_len = jnp.array([13, 30], jnp.int32)
+    paged = flash_decode_paged(q, k_pool, v_pool, kv_len, tables,
+                               interpret=True)
+    dense = flash_decode(q, ref.paged_gather_ref(k_pool, tables),
+                         ref.paged_gather_ref(v_pool, tables), kv_len,
+                         block_kv=bs, interpret=True)
+    np.testing.assert_allclose(paged, dense, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("idx", [
+    [0, 13, 28],     # block start / mid-block / tail
+    [6, 30, 5],      # cross-block write (6+4 spans blocks 0 and 1)
+    [32, -1, 12],    # done slot (== logical end) and negative: dropped
+])
+def test_cache_update_paged_per_slot_offsets(idx):
+    """Paged KV write scatters each slot's rows to the (block, offset)
+    its table maps them to; OOB/negative slots drop WHOLE; pool blocks
+    no table row points at are untouched (in-place aliasing)."""
+    B, max_blocks, bs, Sn, K, D = 3, 4, 8, 4, 2, 16
+    n_blocks = 16
+    k_pool, v_pool, tables = _paged_pools(n_blocks, bs, K, D, B, max_blocks)
+    ks = jax.random.split(KEY, 2)
+    kn = jax.random.normal(ks[0], (B, Sn, K, D))
+    vn = jax.random.normal(ks[1], (B, Sn, K, D))
+    index = jnp.array(idx, jnp.int32)
+    got_k, got_v = cache_update_paged(k_pool, v_pool, kn, vn, index,
+                                      tables, interpret=True)
+    exp_k, exp_v = ref.kv_cache_update_paged_ref(k_pool, v_pool, kn, vn,
+                                                 index, tables)
+    np.testing.assert_array_equal(got_k, exp_k)
+    np.testing.assert_array_equal(got_v, exp_v)
+    unmapped = [b for b in range(n_blocks)
+                if b not in set(np.asarray(tables).ravel().tolist())]
+    assert unmapped                  # the scenario leaves spare blocks
+    np.testing.assert_array_equal(got_k[jnp.array(unmapped)],
+                                  k_pool[jnp.array(unmapped)])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(-1, 32), min_size=1, max_size=3),
+       st.integers(1, 5))
+def test_cache_update_paged_property(raw_idx, Sn):
+    """Property: ANY per-slot offset vector (valid, boundary, OOB) and
+    write width matches the scatter oracle exactly."""
+    B, max_blocks, bs, K, D = len(raw_idx), 4, 8, 2, 8
+    k_pool, v_pool, tables = _paged_pools(12, bs, K, D, B, max_blocks)
+    ks = jax.random.split(KEY, 2)
+    kn = jax.random.normal(ks[0], (B, Sn, K, D))
+    vn = jax.random.normal(ks[1], (B, Sn, K, D))
+    index = jnp.array(raw_idx, jnp.int32)
+    got_k, got_v = cache_update_paged(k_pool, v_pool, kn, vn, index,
+                                      tables, interpret=True)
+    exp_k, exp_v = ref.kv_cache_update_paged_ref(k_pool, v_pool, kn, vn,
+                                                 index, tables)
     np.testing.assert_array_equal(got_k, exp_k)
     np.testing.assert_array_equal(got_v, exp_v)
 

@@ -1,0 +1,300 @@
+"""Paged KV cache: BlockAllocator/PrefixRegistry invariants (property
+tests) and dense-vs-paged ``ServeEngine`` bit-identity — straight runs,
+every chunk-boundary step, prefix sharing, and drain/restore round-trips
+across cache layouts."""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_model_config, get_run_config
+from repro.models import lm
+from repro.models.layers import Ctx
+from repro.models.params import init_params
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.scheduler import BlockAllocator, PrefixRegistry
+from repro.sharding import RULE_SETS
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # container fallback
+    from _hypothesis_fallback import given, settings, st
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ===========================================================================
+# BlockAllocator invariants
+# ===========================================================================
+
+def _replay(ops, n_blocks=8, block_size=4):
+    """Drive an allocator through a random op tape, tracking live block
+    refs the way slots would; returns (allocator, per-holder blocks)."""
+    alloc = BlockAllocator(n_blocks, block_size)
+    held: list[list[int]] = []
+    for kind, arg in ops:
+        if kind == "alloc":
+            n = min(arg, alloc.free_blocks)
+            if n:
+                held.append(alloc.alloc(n))
+        elif kind == "share" and held:
+            blocks = held[arg % len(held)]
+            alloc.share(blocks)
+            held.append(list(blocks))
+        elif kind == "release" and held:
+            alloc.release(held.pop(arg % len(held)))
+        elif kind == "cow" and held:
+            holder = held[arg % len(held)]
+            # the engine gates CoW on pool headroom; mirror that here
+            if holder and (alloc.refcount(holder[-1]) == 1
+                           or alloc.free_blocks >= 1):
+                new, _ = alloc.ensure_private(holder[-1])
+                holder[-1] = new
+    return alloc, held
+
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "share", "release", "cow"]),
+              st.integers(0, 7)),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_OPS)
+def test_allocator_never_double_frees_and_conserves(ops):
+    """Property: any interleaving of alloc/share/release/CoW keeps the
+    books consistent — live refs match holders, free+used == n_blocks,
+    and draining every holder returns the arena to pristine."""
+    alloc, held = _replay(ops)
+    assert alloc.free_blocks + alloc.used_blocks == alloc.n_blocks
+    for holder in held:
+        for b in holder:
+            assert alloc.refcount(b) >= 1
+    for holder in held:
+        alloc.release(holder)
+    assert alloc.used_blocks == 0
+    assert sorted(alloc.state()[0]) == list(range(alloc.n_blocks))
+
+
+@settings(max_examples=30, deadline=None)
+@given(_OPS)
+def test_allocator_same_tape_same_state(ops):
+    """Property: the allocator is a pure function of its op tape — two
+    replays land bit-identical state (the paging determinism root)."""
+    a, _ = _replay(ops)
+    b, _ = _replay(ops)
+    assert a.state() == b.state()
+
+
+def test_allocator_release_free_block_raises():
+    alloc = BlockAllocator(4, 2)
+    blocks = alloc.alloc(2)
+    alloc.release(blocks)
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.release(blocks[:1])
+
+
+def test_allocator_exhaustion_raises():
+    alloc = BlockAllocator(2, 2)
+    alloc.alloc(2)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        alloc.alloc(1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 5))
+def test_cow_never_disturbs_other_holders(n_sharers):
+    """Property: ``ensure_private`` on a block shared N ways hands the
+    writer a FRESH block and leaves the shared block's other N-1 refs
+    (and id) untouched — readers never observe the writer's pivot."""
+    alloc = BlockAllocator(8, 4)
+    [shared] = alloc.alloc(1)
+    for _ in range(n_sharers - 1):
+        alloc.share([shared])
+    ref_before = alloc.refcount(shared)
+    new, copied = alloc.ensure_private(shared)
+    assert copied and new != shared
+    assert alloc.refcount(shared) == ref_before - 1
+    assert alloc.refcount(new) == 1
+    # sole holder: the pivot is a no-op (no wasted copy)
+    alloc2 = BlockAllocator(8, 4)
+    [mine] = alloc2.alloc(1)
+    assert alloc2.ensure_private(mine) == (mine, False)
+
+
+# ===========================================================================
+# PrefixRegistry
+# ===========================================================================
+
+def test_registry_lookup_longest_prefix_and_lru():
+    alloc = BlockAllocator(16, 4)
+    toks = list(range(20))
+    short, long_ = alloc.alloc(1), alloc.alloc(2)
+    reg = PrefixRegistry(alloc)
+    assert reg.register(toks, 4, short)
+    assert reg.register(toks, 8, long_)
+    assert not reg.register(toks, 4, short)     # duplicate: no new ref
+    rows, blocks = reg.lookup(toks, max_rows=20)
+    assert rows == 8 and blocks == long_
+    rows, blocks = reg.lookup(toks, max_rows=5)  # capped: shorter entry
+    assert rows == 4 and blocks == short
+    assert reg.lookup([99] + toks, 20) == (0, [])
+    assert reg.hits == 2 and reg.misses == 1
+
+
+def test_registry_peek_is_side_effect_free():
+    alloc = BlockAllocator(8, 4)
+    reg = PrefixRegistry(alloc)
+    toks = list(range(8))
+    reg.register(toks, 8, alloc.alloc(2))
+    before = (reg.hits, reg.misses, list(reg._entries))
+    assert reg.lookup(toks, 8, peek=True)[0] == 8
+    assert reg.lookup([42], 8, peek=True) == (0, [])
+    assert (reg.hits, reg.misses, list(reg._entries)) == before
+
+
+def test_registry_evict_for_frees_lru_first():
+    alloc = BlockAllocator(4, 4)
+    reg = PrefixRegistry(alloc)
+    a, b = alloc.alloc(2)
+    reg.register([1, 2, 3, 4], 4, [a])
+    reg.register([5, 6, 7, 8], 4, [b])
+    alloc.release([a, b])           # registry holds the only refs now
+    reg.lookup([1, 2, 3, 4], 4)     # touch: [5,6,7,8] becomes LRU
+    assert reg.evict_for(3)
+    assert len(reg) == 1
+    assert reg.lookup([5, 6, 7, 8], 4, peek=True) == (0, [])
+    assert reg.lookup([1, 2, 3, 4], 4, peek=True)[0] == 4
+
+
+# ===========================================================================
+# engine bit-identity: dense vs paged vs paged + prefix sharing
+# ===========================================================================
+
+def _setup(arch, **cfg_over):
+    cfg = reduced(get_model_config(arch))
+    if cfg.n_experts:
+        cfg_over.setdefault("capacity_factor", 8.0)
+    cfg = dataclasses.replace(cfg, **cfg_over)
+    run = get_run_config(arch, remat="none", logits_chunk=16)
+    ctx = Ctx(run, RULE_SETS[run.rules_name], None)
+    params = init_params(lm.model_decls(cfg), KEY)
+    return cfg, run, ctx, params
+
+
+def _mk(setup, **kw):
+    cfg, run, ctx, params = setup
+    kw.setdefault("batch_size", 3)
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("decode_chunk", 4)
+    return ServeEngine(cfg, run, ctx, params, **kw)
+
+
+def _reqs(prefix_len=0, n=5):
+    prefix = [(7 * j + 5) % 97 + 2 for j in range(11)]
+    out = []
+    for i in range(n):
+        suffix = [(13 * i + 3 * j + 1) % 97 + 2 for j in range(3 + i)]
+        prompt = prefix[:prefix_len] + suffix if prefix_len \
+            else prefix + suffix
+        out.append(Request(uid=i, prompt=prompt, max_new_tokens=4 + i % 3,
+                           prefix_len=prefix_len))
+    return out
+
+
+def _streams(done):
+    return {r.uid: list(r.generated) for r in done}
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "zamba2-1.2b"])
+def test_paged_engine_bit_identical_per_step(arch):
+    """Dense and paged engines stay bit-identical at EVERY chunk
+    boundary (not just the final streams), and the paged pool drains
+    leak-free."""
+    setup = _setup(arch)
+    dense, paged = _mk(setup), _mk(setup, paged=True, block_size=8)
+    dense.start(_reqs())
+    paged.start(_reqs())
+    while dense.pending or paged.pending:
+        dense.step()
+        paged.step()
+        live_d = {s.request.uid: list(s.request.generated)
+                  for s in (dense._sched.active() if dense._sched else [])}
+        live_p = {s.request.uid: list(s.request.generated)
+                  for s in (paged._sched.active() if paged._sched else [])}
+        assert live_p == live_d     # mid-flight agreement, every step
+        assert _streams(paged.finished) == _streams(dense.finished)
+    assert _streams(paged.finished) == _streams(dense.finished)
+    # every block returned (or the stream tore down, freeing the pool)
+    assert paged._alloc is None or paged._alloc.used_blocks == 0
+
+
+def test_prefix_sharing_bit_identical_and_skips():
+    setup = _setup("llama3.2-3b")
+    gold = _streams(_mk(setup).generate(_reqs(prefix_len=11)))
+    eng = _mk(setup, paged=True, block_size=8, prefix_sharing=True)
+    got = _streams(eng.generate(_reqs(prefix_len=11)))
+    assert got == gold
+    assert eng.prefill_tokens_skipped > 0
+    assert eng.cow_copies > 0       # 11 rows = 1 full + 1 partial block
+    # all slot refs returned; only the registry's cached prefix remains
+    assert eng._alloc.used_blocks == eng._alloc.blocks_for(11)
+
+
+@pytest.mark.parametrize("src_shared,dst_paged", [
+    (False, True), (False, False), (True, True), (True, False)])
+def test_drain_restore_round_trip_across_layouts(src_shared, dst_paged):
+    """Mid-flight drain from a paged engine restores into BOTH layouts
+    (paged->paged, paged->dense) bit-identically — snapshot payloads are
+    layout-portable, and prefix-trimmed ones rebuild their prefix."""
+    setup = _setup("llama3.2-3b")
+    pl = 11 if src_shared else 0
+    gold = _streams(_mk(setup).generate(_reqs(prefix_len=pl)))
+    src = _mk(setup, paged=True, block_size=8, prefix_sharing=src_shared)
+    src.start(_reqs(prefix_len=pl))
+    src.step()      # first wave is now mid-decode (warm when drained)
+    snaps = src.drain()
+    assert any(s.warm for s in snaps)        # mid-decode state did move
+    dst = _mk(setup, paged=dst_paged, block_size=8,
+              prefix_sharing=dst_paged and src_shared)
+    dst.restore(snaps)
+    while dst.pending:
+        dst.step()
+    assert _streams(src.finished + dst.finished) == gold
+
+
+def test_prefix_trimmed_snapshots_ship_fewer_bytes():
+    """With a registered shared prefix, exported snapshots carry only
+    the private rows — strictly smaller payloads than the dense run."""
+    setup = _setup("llama3.2-3b")
+
+    def payload(**kw):
+        eng = _mk(setup, **kw)
+        eng.start(_reqs(prefix_len=11 if kw.get("prefix_sharing") else 0))
+        eng.step()
+        return sum(s.payload_bytes for s in eng.drain())
+
+    dense_bytes = payload()
+    shared_bytes = payload(paged=True, block_size=8, prefix_sharing=True)
+    assert 0 < shared_bytes < dense_bytes
+
+
+def test_paged_rejects_oversized_and_misaligned():
+    setup = _setup("llama3.2-3b")
+    with pytest.raises(ValueError, match="block_size"):
+        _mk(setup, paged=True, block_size=5)      # 32 % 5 != 0
+    eng = _mk(setup, paged=True, block_size=8, n_blocks=4)
+    with pytest.raises(ValueError):
+        # 20 prompt + 16 new rows span 5 blocks > the 4-block pool:
+        # admitting it would deadlock the FCFS gate forever
+        eng.start([Request(uid=0, prompt=list(range(2, 22)),
+                           max_new_tokens=16)])
+
+
+def test_ssm_family_has_no_paged_mode():
+    setup = _setup("mamba2-370m")
+    with pytest.raises(ValueError, match="no sequence rows to page"):
+        _mk(setup, paged=True, block_size=8)
