@@ -1,0 +1,183 @@
+"""Pareto-steering benchmark: learned-curve ED steering vs scalar steering.
+
+The headline for ``repro.fleet.pareto``: the SAME seed-driven diurnal
+serving trace (``repro.workload.diurnal_trace``) runs through two fleets
+under the same facility budget —
+
+  scalar   ``policy="sensitivity"`` — the incumbent marginal-perf-per-
+           watt transfer loop.  Open-loop serve lanes run their steps
+           continuously, so every node is granted up to its (prefill-
+           driven) full request and burns near-peak watts all day.
+  pareto   ``policy="pareto"`` — each node's grant is CEILINGED at its
+           Euclidean-distance Pareto point on curves fitted online from
+           its own telemetry (J/token vs s/token, the paper's Global
+           Criterion selection lifted from cap tables to grant space),
+           with a small exploration budget probing off-curve caps.
+
+Reported per arm: per-class SLO attainment, goodput (tokens of
+deadline-met completions), total energy (serving + awake-idle hotel
+load) and goodput-per-joule.  Everything runs on the virtual clock —
+bit-deterministic, machine-independent (two same-seed pareto runs are
+asserted identical below).
+
+Machine-readable results go to ``BENCH_pareto.json``.  Smoke gates (CI):
+the pareto arm must reach at least ``--min-gain`` (default 1.0) times
+the scalar arm's goodput-per-joule with interactive-class attainment no
+worse; curve fitting must actually engage (ready nodes, probes); and two
+same-seed pareto runs must emit identical counters.
+
+  PYTHONPATH=src:. python benchmarks/pareto_fleet.py \
+      [--nodes 4] [--duration 120] [--seed 0] [--min-gain 1.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import bench_meta, emit
+from repro.configs.registry import get_model_config
+from repro.fleet import ServeJob, SimulatedCluster
+from repro.hw.tpu import DEFAULT_SUPERCHIP
+from repro.workload import SLOTracker, WorkloadDriver, diurnal_trace
+
+#: Serve-token value (the fleet objective unit).
+SERVE_VALUE = 2.0
+
+#: Awake-idle hotel load per node (an idle node cannot cap away its
+#: host + chip idle draw).
+IDLE_W = DEFAULT_SUPERCHIP.p_floor
+
+#: Virtual seconds a slept node needs to power back up.
+WAKE_S = 2.0
+
+#: Pareto-arm exploration rate: expected probe grants per node per
+#: quantum.  Enough to keep every curve's support fresh over a
+#: benchmark-length run without visibly denting goodput.
+EXPLORE_BUDGET = 0.1
+
+
+def _make_trace(seed: int, duration: float, base_rps: float):
+    return diurnal_trace(seed=seed, until_s=duration, base_rps=base_rps,
+                         amplitude=0.9, period_s=duration / 2.0)
+
+
+def _run_arm(trace, n_nodes: int, duration: float, policy: str) -> dict:
+    cfg = get_model_config("llama3.2-3b")
+    cluster = SimulatedCluster(
+        n_nodes=n_nodes, cabinet_size=max(n_nodes // 2, 1),
+        policy=policy, idle_w=IDLE_W, wake_latency_s=WAKE_S,
+        explore_budget=EXPLORE_BUDGET)
+    tracker = SLOTracker(sink=cluster.telemetry)
+    driver = WorkloadDriver(list(trace), tracker)
+    jobs = [ServeJob(f"svc-{i}", cfg, batch=8, prompt=256, new_tokens=64,
+                     total_requests=0, decode_chunk=8, open_loop=True,
+                     partial=True, migrate=True, value=SERVE_VALUE,
+                     slo=tracker)
+            for i in range(n_nodes)]
+    budget = 0.75 * n_nodes * DEFAULT_SUPERCHIP.p_max
+    counters = cluster.run(jobs=jobs, budget=budget, until_s=duration,
+                           workload=driver)
+    slo = tracker.summary()
+    goodput = tracker.goodput_tokens()
+    energy = counters["energy_j"] + counters["idle_energy_j"]
+    return {
+        "goodput_tokens": goodput,
+        "energy_j": energy,
+        "goodput_per_j": goodput / energy if energy else 0.0,
+        "j_per_useful_token": energy / goodput if goodput else 0.0,
+        "slo": slo,
+        "fleet": counters,
+    }
+
+
+def run(n_nodes: int = 4, duration: float = 120.0, seed: int = 0,
+        base_rps: float = 5.0, min_gain: float | None = None,
+        json_path: str = "BENCH_pareto.json") -> dict:
+    trace = _make_trace(seed, duration, base_rps)
+    scalar = _run_arm(trace, n_nodes, duration, policy="sensitivity")
+    pareto = _run_arm(trace, n_nodes, duration, policy="pareto")
+    # the determinism contract: bit-identical same-seed replay of the
+    # whole stack — trace, curve fitting, exploration, ED targets, SLO
+    # accounting, everything on the virtual clock
+    pareto2 = _run_arm(trace, n_nodes, duration, policy="pareto")
+
+    gain = (pareto["goodput_per_j"] / scalar["goodput_per_j"]
+            if scalar["goodput_per_j"] else float("inf"))
+    att_scalar = scalar["slo"].get("interactive", {}).get("attainment", 1.0)
+    att_pareto = pareto["slo"].get("interactive", {}).get("attainment", 1.0)
+    results = {
+        "scalar": scalar,
+        "pareto": pareto,
+        "goodput_per_j_gain": gain,
+        "interactive_attainment_scalar": att_scalar,
+        "interactive_attainment_pareto": att_pareto,
+        "scenario": {
+            "nodes": n_nodes, "duration_s": duration, "seed": seed,
+            "base_rps": base_rps, "arrivals": len(trace),
+            "idle_w": IDLE_W, "wake_latency_s": WAKE_S,
+            "serve_value": SERVE_VALUE,
+            "explore_budget": EXPLORE_BUDGET,
+        },
+    }
+    results["meta"] = bench_meta(seed=seed, config=results["scenario"])
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=1)
+
+    for label, r in (("scalar", scalar), ("pareto", pareto)):
+        fc = r["fleet"]
+        extra = (f"|curves={fc['curve_ready_nodes']}rdy"
+                 f"@{fc['curve_confidence']:.2f}"
+                 f"|probes={fc['explore_probes']}"
+                 if label == "pareto" else "")
+        emit(f"pareto_{label}", fc["busy_s"] * 1e6,
+             f"{r['goodput_tokens']}goodtok"
+             f"|{r['j_per_useful_token']*1e3:.2f}mJ/tok"
+             f"|{r['energy_j']:.0f}J{extra}")
+    for name, s in sorted(pareto["slo"].items()):
+        emit(f"pareto_slo_{name}", 0.0,
+             f"att={s['attainment']:.3f}|p99={s['p99_latency_s']:.2f}s"
+             f"|done={s['completed']}")
+    emit("pareto_goodput_per_j_gain", 0.0, f"{gain:.3f}x")
+
+    # acceptance gates: curve learning must actually engage, two
+    # same-seed runs must be bit-identical, and the Pareto ceilings must
+    # buy goodput-per-joule without costing interactive attainment
+    pf = pareto["fleet"]
+    assert pf["curve_samples"] > 0 and pf["curve_ready_nodes"] > 0, (
+        "pareto arm never fit a curve — learning path broken")
+    assert pf["explore_probes"] > 0, (
+        "pareto arm never probed off-curve — exploration path broken")
+    assert pareto == pareto2, \
+        "same-seed pareto runs diverged — determinism broken"
+    assert att_pareto >= att_scalar - 1e-9, (
+        f"pareto steering cost interactive attainment "
+        f"({att_pareto:.4f} < {att_scalar:.4f})")
+    assert gain >= 1.0, (
+        f"pareto arm LOST goodput-per-joule ({gain:.3f}x)")
+    if min_gain is not None and gain < min_gain:
+        raise SystemExit(
+            f"pareto regression: goodput-per-joule gain {gain:.3f}x "
+            f"below threshold {min_gain}x")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--duration", type=float, default=120.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--base-rps", type=float, default=5.0)
+    ap.add_argument("--min-gain", type=float, default=None,
+                    help="fail loudly when the pareto arm's goodput-per-"
+                         "joule gain over scalar falls below this factor "
+                         "(CI smoke)")
+    ap.add_argument("--json-path", default="BENCH_pareto.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.nodes, args.duration, args.seed, args.base_rps,
+        args.min_gain, args.json_path)
+
+
+if __name__ == "__main__":
+    main()

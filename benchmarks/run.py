@@ -7,7 +7,7 @@ import sys
 import traceback
 
 from benchmarks import (cell_caps, chaos, fig1_power_trace, fig2_sed_sweep,
-                        fig3_ed_sweep, fleet_power, migration,
+                        fig3_ed_sweep, fleet_power, migration, pareto_fleet,
                         prefix_sharing, roofline, serving_throughput,
                         steering_policy, table1_task_profile,
                         table2_optimal_caps, traffic_slo)
@@ -27,6 +27,7 @@ BENCHES = [
     ("traffic", traffic_slo),
     ("chaos", chaos),
     ("prefix", prefix_sharing),
+    ("pareto", pareto_fleet),
 ]
 
 

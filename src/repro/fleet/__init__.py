@@ -18,6 +18,14 @@ simulated multi-node, multi-job cluster —
                  preempted ServeJob drains its engine into portable
                  SlotSnapshots and restores them on whichever node it
                  resumes on (cross-node transfers charged on the clock)
+  pareto.py      PowerCurveModel / CurveBank + pareto_cap: per-node
+                 perf-vs-cap and watts-vs-cap curves fitted online from
+                 NodeSamples (EWMA least squares over the sweet-spot
+                 family, confidence-gated), steering each node to its
+                 normalized ED Pareto point under the same budget
+                 hierarchy (``policy="pareto"``), with a grant-level
+                 exploration budget probing off-curve caps so
+                 mis-modeled nodes recover
   telemetry.py   FleetTelemetry: per-node samples -> fleet counters
                  (tokens, joules, grants, violations, migrated vs dropped
                  tokens, SLO / queue / power-gating / fault-recovery
@@ -60,6 +68,8 @@ from repro.fleet.cluster import (BudgetTrace, FleetNode, SimulatedCluster,
 from repro.fleet.controller import FleetAllocation, FleetPowerController
 from repro.fleet.faults import (FAULT_KINDS, FaultEvent, FaultInjector,
                                 chaos_schedule)
+from repro.fleet.pareto import (CurveBank, GrantPoint, PowerCurveModel,
+                                pareto_cap, probe_grid)
 from repro.fleet.scheduler import (FleetScheduler, Job, ServeJob, TrainJob)
 from repro.fleet.telemetry import FleetTelemetry, NodeSample
 
@@ -67,6 +77,8 @@ __all__ = [
     "BudgetTrace", "FleetNode", "SimulatedCluster", "VirtualClock",
     "FleetAllocation", "FleetPowerController",
     "FAULT_KINDS", "FaultEvent", "FaultInjector", "chaos_schedule",
+    "CurveBank", "GrantPoint", "PowerCurveModel", "pareto_cap",
+    "probe_grid",
     "FleetScheduler", "Job", "ServeJob", "TrainJob",
     "FleetTelemetry", "NodeSample",
 ]

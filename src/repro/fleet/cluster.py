@@ -26,6 +26,7 @@ import dataclasses
 from typing import Iterable
 
 from repro.fleet.controller import FleetPowerController
+from repro.fleet.pareto import CurveBank
 from repro.fleet.scheduler import FleetScheduler, Job
 from repro.fleet.telemetry import FleetTelemetry, NodeSample
 from repro.hw.tpu import DEFAULT_SUPERCHIP, SuperchipSpec
@@ -375,7 +376,8 @@ class SimulatedCluster:
                  cross_cabinet_bw: float | None = None,
                  idle_w: float = 0.0, wake_latency_s: float = 2.0,
                  faults=None, watchdog_deadline_s: float | None = None,
-                 shadow_ckpt_s: float | None = None, tracer=None):
+                 shadow_ckpt_s: float | None = None, tracer=None,
+                 explore_budget: float = 0.1):
         if n_nodes < 1:
             raise ValueError("need at least one node")
         self.spec = spec
@@ -407,7 +409,15 @@ class SimulatedCluster:
             node.tracer = self.tracer
         self._cabinet_of = {n.name: n.cabinet for n in self.nodes}
         self.clock = VirtualClock()
-        self.controller = FleetPowerController(policy=policy)
+        # pareto mode learns per-node power curves online and steers each
+        # node to its fitted ED sweet spot; every other policy keeps the
+        # curve bank off so the legacy paths stay bit-identical
+        self.curves = CurveBank() if policy == "pareto" else None
+        self.explore_budget = explore_budget
+        self.controller = FleetPowerController(
+            policy=policy, curves=self.curves,
+            explore_budget=explore_budget if self.curves is not None
+            else 0.0)
         self.controller.tracer = self.tracer
         self.telemetry = FleetTelemetry()
         self.scheduler: FleetScheduler | None = None
@@ -510,7 +520,9 @@ class SimulatedCluster:
             list(jobs),
             min_node_w=self.nodes[0].floor_w + self.useful_margin_w,
             margin_w=self.useful_margin_w,
-            watchdog_deadline_s=self.watchdog_deadline_s)
+            watchdog_deadline_s=self.watchdog_deadline_s,
+            slot_w_fn=(self.curves.slot_watt
+                       if self.curves is not None else None))
         self.scheduler = sched
         tr = self.tracer if self.tracer.enabled else None
         while self.clock.now < until_s:
@@ -649,6 +661,21 @@ class SimulatedCluster:
                     sample = filtered
                 if sample is not None:
                     self.telemetry.record(sample)
+                    if self.curves is not None:
+                        # feed the curve bank with what the bus accepted
+                        # — the same filtered view the scoreboard sees,
+                        # so a corrupt window poisons the fit exactly as
+                        # far as it poisons the ledger (the exploration
+                        # budget is what walks it back)
+                        self.curves.observe(
+                            sample,
+                            slots=getattr(node.job, "active_cap", None)
+                            if node.job is not None else None)
+            if self.curves is not None:
+                self.telemetry.record_curve_state(
+                    self.curves.observations, self.curves.ready_count(),
+                    self.curves.mean_confidence(),
+                    self.controller.explore_probes)
 
             # 4b. periodic shadow checkpoints: each serve job's warm
             #     slots are captured and replicated off-node, so a crash

@@ -34,6 +34,9 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.fleet.pareto import (fitted_cost_per_token, GrantPoint,
+                                modeled_cost_per_token, pareto_cap,
+                                probe_grid)
 from repro.obs.tracer import NULL_TRACER
 from repro.power.arbiter import weighted_split
 
@@ -53,6 +56,9 @@ class FleetAllocation:
     node_w: dict[str, float]
     sensitivities: dict[str, float]
     cabinet_ceils: dict[str, float] = dataclasses.field(default_factory=dict)
+    #: pareto mode only: each node's target cap (its ED Pareto point, or
+    #: the probe cap on exploration quanta) before the budget water-fill
+    pareto_w: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def assert_conserved(self, floors: dict[str, float],
                          tol: float = 1e-6) -> None:
@@ -93,17 +99,37 @@ class FleetPowerController:
                           sensitivities, headroom stranded on nodes that
                           can't use it)
       * ``"sensitivity"`` request-aware water-fill + marginal-perf-per-
-                          watt transfer refinement (the tentpole policy)
+                          watt transfer refinement (the scalar weighted-
+                          throughput default)
+      * ``"pareto"``      each node's request becomes its Euclidean-
+                          distance Pareto-point cap over normalized
+                          (J/token, s/token) — fitted curves from the
+                          ``curves`` bank when confident, the modeled
+                          curve as cold-start fallback — water-filled
+                          under the same hierarchy; ``explore_budget``
+                          grants per allocation are spent probing
+                          off-curve caps so mis-modeled nodes recover
     """
 
     def __init__(self, policy: str = "sensitivity",
                  transfer_w: float = TRANSFER_W,
-                 rounds_per_node: int = TRANSFER_ROUNDS_PER_NODE):
-        if policy not in ("even", "sensitivity"):
+                 rounds_per_node: int = TRANSFER_ROUNDS_PER_NODE,
+                 curves=None, explore_budget: float = 0.0):
+        if policy not in ("even", "sensitivity", "pareto"):
             raise ValueError(f"unknown policy {policy!r}")
         self.policy = policy
         self.transfer_w = transfer_w
         self.rounds_per_node = rounds_per_node
+        #: pareto mode: the fleet ``CurveBank`` (None = modeled curves only)
+        self.curves = curves
+        #: pareto mode: expected exploration probes per node per
+        #: allocation (0.15 => each node probes every ~7th re-decide, the
+        #: cadence ``PowerManager.explore_every`` uses on its own sweep)
+        self.explore_budget = explore_budget
+        self._explore_carry = 0.0
+        self._probe_rr = 0                      # fleet round-robin cursor
+        self._probe_idx: dict[str, int] = {}    # per-node sweep cursor
+        self.explore_probes = 0
         self.tracer = NULL_TRACER    # the cluster wires a live Tracer in
         self.allocations = 0
         # degraded mode: last grant that was decided from TRUSTED telemetry,
@@ -153,8 +179,12 @@ class FleetPowerController:
             others = sum(w for k, w in floors.items() if k not in pinned)
             if sum(pinned.values()) + others > budget_w:
                 pinned = {k: floors[k] for k in pinned}
+        targets: dict[str, float] = {}
         if self.policy == "even":
             grants = self._even(budget_w, nodes, floors, ceils, pinned)
+        elif self.policy == "pareto":
+            grants, targets = self._pareto(budget_w, nodes, floors, ceils,
+                                           pinned, t)
         else:
             grants = self._steer(budget_w, nodes, floors, ceils, pinned)
         cabinets: dict[str, float] = {}
@@ -165,7 +195,7 @@ class FleetPowerController:
             t=t, facility_w=budget_w, cabinet_w=cabinets, node_w=grants,
             sensitivities={n.name: n.sensitivity() for n in nodes}
             if self.policy == "sensitivity" else {},
-            cabinet_ceils=ceils)
+            cabinet_ceils=ceils, pareto_w=targets)
         alloc.assert_conserved(floors)
         for k, g in grants.items():
             if k not in pinned:
@@ -348,3 +378,135 @@ class FleetPowerController:
             cab_total[cab_of[recipient]] += dw
             cab_total[cab_of[donor]] -= dw
         return grants
+
+    # -- Pareto steering (repro.fleet.pareto) -------------------------------
+    def _pareto_target(self, node) -> float:
+        """The node's Euclidean-distance Pareto-point cap: candidate
+        grants on its sweep scored by normalized (J/token, s/token)
+        distance to the utopia point, the delay axis weighted by the
+        job's token value (``edw``-style — a high-value latency-
+        sensitive job penalizes delay harder and lands on a higher
+        cap).  Fitted curves are used once the node's fit is confident;
+        the modeled curve is the cold-start fallback."""
+        lo = node.floor_w
+        hi = min(node.request_w(), node.ceil_w) \
+            if hasattr(node, "request_w") else node.ceil_w
+        hi = max(hi, lo)
+        model = None
+        if self.curves is not None:
+            m = self.curves.for_node(node.name)
+            if m.ready:
+                model = m
+        value = float(getattr(node, "job_value", 1.0) or 0.0)
+        weight = value if value > 0 else 1.0
+        points = []
+        for cap in probe_grid(node):
+            cap = min(max(cap, lo), hi)
+            cost = (fitted_cost_per_token(model, cap)
+                    if model is not None else None)
+            if cost is None:
+                cost = modeled_cost_per_token(node, cap)
+            if cost is None:
+                continue
+            points.append(GrantPoint(cap, cost[0], cost[1]))
+        if not points:
+            return hi
+        # the grid may clamp duplicates onto hi/lo; dedupe keeping the
+        # first occurrence so normalization sees each cap once
+        seen, uniq = set(), []
+        for p in points:
+            if p.cap_w not in seen:
+                seen.add(p.cap_w)
+                uniq.append(p)
+        if len(uniq) == 1:
+            return uniq[0].cap_w
+        return pareto_cap(uniq, runtime_weight=weight)
+
+    def _explore(self, nodes: list, targets: dict[str, float],
+                 pinned: dict) -> list[str]:
+        """Spend the exploration budget: ``explore_budget * len(nodes)``
+        accrues per allocation, and every whole probe earned retargets
+        the next node (fleet round-robin) at the next cap on ITS sweep
+        (per-node round-robin) instead of its Pareto point.  The probed
+        grant produces an observation off the fitted curve, which is how
+        a mis-modeled node gets corrected — the fleet-level analogue of
+        ``PowerManager.next_cap``'s ``explore_every`` sweep."""
+        if self.curves is None or self.explore_budget <= 0:
+            return []
+        explorable = [n for n in nodes if n.name not in pinned]
+        if not explorable:
+            return []
+        self._explore_carry += self.explore_budget * len(explorable)
+        probed = []
+        while self._explore_carry >= 1.0 and len(probed) < len(explorable):
+            self._explore_carry -= 1.0
+            node = explorable[self._probe_rr % len(explorable)]
+            self._probe_rr += 1
+            if node.name in probed:
+                continue
+            grid = probe_grid(node)
+            idx = self._probe_idx.get(node.name, 0)
+            self._probe_idx[node.name] = idx + 1
+            cap = grid[idx % len(grid)]
+            targets[node.name] = min(max(cap, node.floor_w), node.ceil_w)
+            probed.append(node.name)
+            self.explore_probes += 1
+        return probed
+
+    def _pareto(self, budget_w: float, nodes: list,
+                floors: dict[str, float],
+                cab_ceils: dict[str, float],
+                pinned: "dict[str, float] | None",
+                t: float) -> tuple[dict[str, float], dict[str, float]]:
+        """Pareto-point steering: each node's request AND ceiling is its
+        target cap (nobody is granted watts past its own sweet spot —
+        the budget saved is the policy's point), water-filled through
+        the same facility -> cabinet -> node hierarchy as ``_steer``.
+        Degraded-mode pins behave identically to the scalar modes:
+        floor == ceil == pin."""
+        pinned = pinned or {}
+        floors = dict(floors)
+        targets: dict[str, float] = {}
+        for n in nodes:
+            if n.name in pinned:
+                continue
+            targets[n.name] = self._pareto_target(n)
+        probed = self._explore(nodes, targets, pinned)
+        requests: dict[str, float] = {}
+        ceils_n: dict[str, float] = {}
+        for n in nodes:
+            if n.name in pinned:
+                w = pinned[n.name]
+                requests[n.name] = ceils_n[n.name] = floors[n.name] = w
+            else:
+                w = min(max(targets[n.name], floors[n.name]), n.ceil_w)
+                targets[n.name] = w
+                requests[n.name] = ceils_n[n.name] = w
+        if not cab_ceils:
+            grants = weighted_split(requests, budget_w, floor=floors,
+                                    ceil=ceils_n,
+                                    weights={k: 1.0 for k in requests})
+        else:
+            budgets, by_cab = self._cabinet_budgets(budget_w, nodes,
+                                                    floors, cab_ceils,
+                                                    requests)
+            grants = {}
+            for cab in sorted(by_cab):
+                ns = by_cab[cab]
+                grants.update(weighted_split(
+                    {n.name: requests[n.name] for n in ns}, budgets[cab],
+                    floor={n.name: floors[n.name] for n in ns},
+                    ceil={n.name: ceils_n[n.name] for n in ns},
+                    weights={n.name: 1.0 for n in ns}))
+        if self.tracer.enabled:
+            conf = (self.curves.confidences()
+                    if self.curves is not None else {})
+            self.tracer.instant(
+                "pareto_decide", t, "fleet", cat="controller",
+                args={"nodes": len(nodes), "probes": len(probed),
+                      "ready": (self.curves.ready_count()
+                                if self.curves is not None else 0),
+                      "targets": dict(sorted(targets.items()))})
+            if conf:
+                self.tracer.counter("curve_confidence", t, conf)
+        return grants, targets

@@ -943,10 +943,19 @@ class FleetScheduler:
     partially shed jobs into recovered headroom, admit fresh work."""
 
     def __init__(self, jobs, min_node_w: float, margin_w: float = 0.0,
-                 watchdog_deadline_s: float | None = None):
+                 watchdog_deadline_s: float | None = None,
+                 slot_w_fn=None):
         self.queue: deque[Job] = deque(jobs)
         self.min_node_w = min_node_w
         self.margin_w = margin_w
+        #: optional fitted per-slot watt cost, ``fn(node_name) -> float |
+        #: None`` (the ``CurveBank.slot_watt`` fit in pareto mode): when
+        #: it returns a confident positive cost, shed sizing and partial
+        #: margins use the OBSERVED watts a slot gives back instead of
+        #: the static ``margin_w / capacity`` share — exact drains.
+        #: None (the default) preserves the historical heuristic
+        #: bit-for-bit.
+        self.slot_w_fn = slot_w_fn
         self.paused: list[_Paused] = []
         self.completed: list[Job] = []
         #: declare a busy node dead after this many virtual seconds
@@ -960,15 +969,33 @@ class FleetScheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or bool(self.paused)
 
+    def _fitted_slot_w(self, node) -> "float | None":
+        """The learned per-slot watt cost for ``node`` (clamped into
+        (0, margin_w]), or None while no confident fit exists — callers
+        fall back to the static ``margin_w / capacity`` share, keeping
+        the default path bit-identical."""
+        if self.slot_w_fn is None or self.margin_w <= 0:
+            return None
+        w = self.slot_w_fn(getattr(node, "name", ""))
+        if w is None or w <= 0:
+            return None
+        return min(w, self.margin_w)
+
     def node_min_w(self, node) -> float:
         """Watts this busy node needs under the envelope: the full
         floor+margin, except that a partial-capable serve job only needs
-        margin for the slots it actually decodes."""
+        margin for the slots it actually decodes — priced at the FITTED
+        per-slot cost when the curve bank has one, the static share
+        otherwise."""
         job = getattr(node, "job", None)
         if (job is not None and self.margin_w > 0
                 and getattr(job, "partial_capable", False)):
             cap = max(getattr(job, "capacity", 1), 1)
             k = getattr(job, "active_cap", cap)
+            fitted = self._fitted_slot_w(node)
+            if fitted is not None:
+                return self.min_node_w - self.margin_w \
+                    + min(self.margin_w, fitted * k)
             return self.min_node_w - self.margin_w \
                 + self.margin_w * k / cap
         return self.min_node_w
@@ -1085,7 +1112,11 @@ class FleetScheduler:
             if (self.margin_w > 0
                     and getattr(job, "partial_capable", False)
                     and getattr(job, "active_cap", 1) > 1):
-                per_slot = self.margin_w / max(job.capacity, 1)
+                fitted = self._fitted_slot_w(node)
+                if fitted is not None:
+                    per_slot = fitted
+                else:
+                    per_slot = self.margin_w / max(job.capacity, 1)
                 k_shed = int(math.ceil((need - budget_w) / per_slot))
             if 0 < k_shed <= job.active_cap - 1:
                 # the shortfall fits inside this victim's batch: shed the
@@ -1173,7 +1204,9 @@ class FleetScheduler:
                 goal = cap if goal is None else max(1, min(goal, cap))
                 if k >= goal:
                     continue
-                per_slot = self.margin_w / cap
+                fitted = self._fitted_slot_w(node)
+                per_slot = fitted if fitted is not None \
+                    else self.margin_w / cap
                 k_more = min(goal - k,
                              int((budget_w - need) / per_slot + 1e-9))
                 if k_more <= 0:

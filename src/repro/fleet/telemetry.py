@@ -85,6 +85,11 @@ class FleetTelemetry:
         self.degraded_quanta = 0     # node-quanta allocated in degraded mode
         self.corrupt_samples = 0     # NodeSamples rejected by validation
         self.dropped_samples = 0     # NodeSamples lost to telemetry dropout
+        # -- learned power curves (repro.fleet.pareto drives these) ---------
+        self.curve_samples = 0       # NodeSamples folded into curve fits
+        self.curve_ready_nodes = 0   # nodes whose fit is confident (gauge)
+        self.curve_confidence = 0.0  # mean fit confidence (gauge)
+        self.explore_probes = 0      # off-curve exploration grants issued
         # per-SLO-class request counters (offered / rejected / completed /
         # met / goodput tokens), keyed by class name
         self.slo: dict[str, dict[str, int]] = {}
@@ -213,6 +218,17 @@ class FleetTelemetry:
         """A NodeSample never arrived (telemetry dropout window)."""
         self.dropped_samples += 1
 
+    def record_curve_state(self, samples: int, ready_nodes: int,
+                           mean_confidence: float, probes: int) -> None:
+        """Mirror the ``CurveBank``'s fit scoreboard (cumulative samples
+        folded in, confident-node count, mean confidence) and the
+        controller's cumulative exploration-probe count — gauges, set
+        each quantum by the cluster in pareto mode."""
+        self.curve_samples = samples
+        self.curve_ready_nodes = ready_nodes
+        self.curve_confidence = mean_confidence
+        self.explore_probes = probes
+
     def _slo_cls(self, name: str) -> dict[str, int]:
         return self.slo.setdefault(name, {
             "offered": 0, "rejected": 0, "completed": 0, "met": 0,
@@ -281,6 +297,10 @@ class FleetTelemetry:
             "degraded_quanta": self.degraded_quanta,
             "corrupt_samples": self.corrupt_samples,
             "dropped_samples": self.dropped_samples,
+            "curve_samples": self.curve_samples,
+            "curve_ready_nodes": self.curve_ready_nodes,
+            "curve_confidence": self.curve_confidence,
+            "explore_probes": self.explore_probes,
             "j_per_token": (self.energy_j / self.tokens
                             if self.tokens else 0.0),
             "slo": {k: dict(v) for k, v in sorted(self.slo.items())},

@@ -81,7 +81,14 @@ def main() -> None:
     ap.add_argument("--jobs", type=int, default=None,
                     help="queue length (default: one per node)")
     ap.add_argument("--policy", default="sensitivity",
-                    choices=("even", "sensitivity"))
+                    choices=("even", "sensitivity", "pareto"))
+    ap.add_argument("--pareto", action="store_true",
+                    help="shorthand for --policy pareto: steer each node "
+                         "to its learned-curve ED Pareto point")
+    ap.add_argument("--explore-budget", type=float, default=0.1,
+                    help="pareto exploration rate: expected off-curve "
+                         "probe grants per node per quantum (0 disables "
+                         "probing; only used by --policy pareto)")
     ap.add_argument("--power-metric", default="sed",
                     choices=available_metrics())
     ap.add_argument("--budget-frac", default="0.85,0.60,0.45",
@@ -151,6 +158,8 @@ def main() -> None:
                     help="write per-quantum counter snapshots to this "
                          "path as JSONL")
     args = ap.parse_args()
+    if args.pareto:
+        args.policy = "pareto"
 
     p_max = args.nodes * DEFAULT_SUPERCHIP.p_max
     fracs = [float(x) for x in args.budget_frac.split(",")]
@@ -180,7 +189,8 @@ def main() -> None:
         cross_cabinet_bw=args.cross_cabinet_bw,
         idle_w=idle_w, wake_latency_s=args.wake_s,
         faults=injector, watchdog_deadline_s=args.watchdog_s,
-        shadow_ckpt_s=args.ckpt_s, tracer=tracer)
+        shadow_ckpt_s=args.ckpt_s, tracer=tracer,
+        explore_budget=args.explore_budget)
 
     workload = None
     tracker = None
@@ -260,6 +270,17 @@ def main() -> None:
                   f"({counters['checkpoint_bytes'] / 1e6:.1f} MB): "
                   f"{counters['replayed_tokens']} tokens replayed, "
                   f"{counters['lost_tokens']} lost to crashes")
+    if cluster.curves is not None:
+        print(f"[pareto] {counters['curve_samples']} curve samples, "
+              f"{counters['curve_ready_nodes']}/{args.nodes} nodes "
+              f"curve-ready (mean confidence "
+              f"{counters['curve_confidence']:.2f}), "
+              f"{counters['explore_probes']} exploration probes "
+              f"(budget {args.explore_budget:.2f}/node/quantum)")
+        conf = cluster.curves.confidences()
+        if conf:
+            print("[curves] " + ", ".join(
+                f"{name}={c:.2f}" for name, c in sorted(conf.items())))
     if counters["adoptions"]:
         print(f"[adopt] {counters['adoptions']} cross-job adoptions: "
               f"{counters['adopted_slots']} streams "

@@ -22,7 +22,9 @@ Quick start::
 above this package lives in ``repro.fleet``.
 """
 
-from repro.power.metrics import (Metric, available_metrics, get_metric,
+from repro.power.metrics import (Metric, available_metrics,
+                                 euclidean_distance_scores, get_metric,
+                                 minmax_normalize, nearest_utopia_pick,
                                  optimal_cap, rank_caps, register_metric)
 from repro.power.backends import (CapBackend, HwmonBackend, LoggingBackend,
                                   SimulatedBackend)
@@ -32,7 +34,8 @@ from repro.power.arbiter import CapSource, PodPowerArbiter, weighted_split
 
 __all__ = [
     "Metric", "register_metric", "get_metric", "available_metrics",
-    "optimal_cap", "rank_caps",
+    "optimal_cap", "rank_caps", "minmax_normalize",
+    "euclidean_distance_scores", "nearest_utopia_pick",
     "CapBackend", "SimulatedBackend", "LoggingBackend", "HwmonBackend",
     "PowerGoal", "SteeringGoal", "CapDecision", "CapSchedule",
     "PhaseRecord", "PowerManager",

@@ -20,10 +20,63 @@ Built-ins:
 
 from __future__ import annotations
 
+import math
 from typing import Callable, Protocol, runtime_checkable
 
 from repro.core import metrics as _paper
 from repro.core.tasks import TaskTable
+
+
+# ---------------------------------------------------------------------------
+# shared distance machinery (lifted out of single-node selection)
+# ---------------------------------------------------------------------------
+#
+# The paper's Global Criterion method — Euclidean distance of min-max-
+# normalized objectives, argmin is Pareto-optimal — used to live only in
+# the per-task metric classes below.  The fleet-level Pareto controller
+# (``repro.fleet.pareto``) scores candidate GRANTS with the same math, so
+# the normalization + distance code is shared here.  The formulas are kept
+# verbatim from the historical implementations (``math.sqrt`` for the
+# unweighted case, ``** 0.5`` for the weighted one) so registry scores and
+# cap picks stay bit-identical — ``tests/test_paper_claims.py`` pins this.
+
+def minmax_normalize(vals: "list[float]") -> list[float]:
+    """Min-max normalize to [0, 1]; a degenerate axis (all values equal)
+    collapses to 0.0 everywhere, exactly like the paper-layer helper."""
+    lo, hi = min(vals), max(vals)
+    if hi - lo <= 0:
+        return [0.0 for _ in vals]
+    return [(v - lo) / (hi - lo) for v in vals]
+
+
+def euclidean_distance_scores(pairs: "list[tuple[float, float]]",
+                              runtime_weight: float = 1.0) -> list[float]:
+    """Distance of each min-max-normalized ``(energy-like, runtime-like)``
+    pair from the utopia point (0, 0).  Lower is better; the argmin is
+    Pareto-optimal (Global Criterion).  ``runtime_weight`` scales the
+    second axis — >1 pulls the pick toward faster (higher-cap) settings,
+    the ``edw`` family."""
+    n_a = minmax_normalize([a for a, _ in pairs])
+    n_b = minmax_normalize([b for _, b in pairs])
+    if runtime_weight == 1.0:
+        return [math.sqrt(a * a + b * b) for a, b in zip(n_a, n_b)]
+    w = runtime_weight
+    return [(a * a + w * w * b * b) ** 0.5 for a, b in zip(n_a, n_b)]
+
+
+#: Absolute tie tolerance for minimize-style distance picks (mirrors the
+#: historical ``ed_optimal_cap`` argmin exactly).
+ED_TIE_ABS = 1e-12
+
+
+def nearest_utopia_pick(keys: "list[float]",
+                        pairs: "list[tuple[float, float]]",
+                        runtime_weight: float = 1.0) -> float:
+    """The key whose pair sits closest to the utopia point; distance ties
+    resolve to the LOWER key (energy-prudent, like every cap pick)."""
+    d = euclidean_distance_scores(pairs, runtime_weight)
+    best = min(d)
+    return min(k for k, v in zip(keys, d) if v <= best + ED_TIE_ABS)
 
 
 @runtime_checkable
@@ -124,12 +177,16 @@ class SedMetric:
 @register_metric("ed")
 class EdMetric:
     """Paper metric 2: Euclidean distance of min-max-normalized
-    (energy, runtime); the argmin is Pareto-optimal."""
+    (energy, runtime); the argmin is Pareto-optimal.  Scores through the
+    shared ``euclidean_distance_scores`` — the same code the fleet Pareto
+    controller ranks candidate grants with."""
 
     higher_is_better = False
 
     def score(self, table: TaskTable, task: str) -> dict[float, float]:
-        return _paper.euclidean_distance(table, task)
+        rows = table.for_task(task)
+        d = euclidean_distance_scores([(r.energy, r.runtime) for r in rows])
+        return {r.cap: v for r, v in zip(rows, d)}
 
 
 @register_metric("edw")
@@ -145,8 +202,6 @@ class RuntimeWeightedEd:
 
     def score(self, table: TaskTable, task: str) -> dict[float, float]:
         rows = table.for_task(task)
-        n_e = _paper._minmax([r.energy for r in rows])
-        n_t = _paper._minmax([r.runtime for r in rows])
-        w = self.runtime_weight
-        return {r.cap: (ne * ne + w * w * nt * nt) ** 0.5
-                for r, ne, nt in zip(rows, n_e, n_t)}
+        d = euclidean_distance_scores([(r.energy, r.runtime) for r in rows],
+                                      runtime_weight=self.runtime_weight)
+        return {r.cap: v for r, v in zip(rows, d)}

@@ -2,7 +2,8 @@
 
 Only the surface the test suite uses is provided: ``st.floats``,
 ``st.integers``, ``st.booleans``, ``st.tuples``, ``st.lists``,
-``st.sampled_from``, ``st.dictionaries``, ``@given`` and ``@settings``.  ``given`` runs
+``st.sampled_from``, ``st.dictionaries``, ``st.just``, ``st.one_of``,
+``@given`` and ``@settings``.  ``given`` runs
 the test body over a fixed-seed batch of generated examples, so the
 property tests still exercise a spread of inputs (just without shrinking
 or the full search strategies of real hypothesis).
@@ -48,6 +49,16 @@ class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
     def sampled_from(elements) -> _Strategy:
         pool = list(elements)
         return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+    @staticmethod
+    def just(value) -> _Strategy:
+        return _Strategy(lambda rng: value)
+
+    @staticmethod
+    def one_of(*strats: _Strategy) -> _Strategy:
+        pool = list(strats)
+        return _Strategy(
+            lambda rng: pool[rng.randrange(len(pool))].example(rng))
 
     @staticmethod
     def tuples(*strats: _Strategy) -> _Strategy:

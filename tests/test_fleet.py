@@ -104,6 +104,18 @@ class _StubNode:
 
 
 _IDS = st.sampled_from(["a", "b", "c", "d", "e", "f", "g", "h"])
+_POLICIES = st.sampled_from(["even", "sensitivity", "pareto"])
+
+
+def _make_controller(policy: str) -> FleetPowerController:
+    """Build a controller for any policy; pareto gets a live curve bank
+    and a nonzero exploration budget so the probe path is exercised by
+    the same conformance properties as the scalar modes."""
+    if policy == "pareto":
+        from repro.fleet import CurveBank
+        return FleetPowerController(policy="pareto", curves=CurveBank(),
+                                    explore_budget=0.25)
+    return FleetPowerController(policy=policy)
 
 
 @settings(max_examples=60, deadline=None)
@@ -113,15 +125,15 @@ _IDS = st.sampled_from(["a", "b", "c", "d", "e", "f", "g", "h"])
                                  st.booleans()),
                        min_size=1, max_size=8),
        st.floats(min_value=150.0, max_value=1500.0),
-       st.booleans())
-def test_controller_conserves_budget(cfgs, budget, sens):
+       _POLICIES)
+def test_controller_conserves_budget(cfgs, budget, policy):
     """Sum(node grants) <= facility budget at every allocation (when the
     budget covers the floors), and cabinet grants roll up exactly — for
-    random node mixes under both policies."""
+    random node mixes under all three policies."""
     nodes = [_StubNode(name=f"cab{i % 2}/{k}", cabinet=f"cab{i % 2}",
                        request=req, scale=sc)
              for i, (k, (req, sc, _)) in enumerate(sorted(cfgs.items()))]
-    ctl = FleetPowerController(policy="sensitivity" if sens else "even")
+    ctl = _make_controller(policy)
     alloc = ctl.redistribute(budget, nodes, t=1.0)
     floors = {n.name: n.floor_w for n in nodes}
     alloc.assert_conserved(floors)        # cabinet roll-up == node grants
@@ -140,9 +152,9 @@ def test_controller_conserves_budget(cfgs, budget, sens):
                        min_size=1, max_size=8),
        st.floats(min_value=150.0, max_value=1500.0),
        st.floats(min_value=120.0, max_value=700.0),
-       st.booleans())
+       _POLICIES)
 def test_controller_conserves_with_cabinet_ceilings(cfgs, budget, cab_ceil,
-                                                    sens):
+                                                    policy):
     """Cabinet busbar/cooling ceilings are ENFORCED, not just accounted:
     with the middle weighted_split level active, every cabinet roll-up
     stays at or below its ceiling (floors excepted — physics wins), the
@@ -151,7 +163,7 @@ def test_controller_conserves_with_cabinet_ceilings(cfgs, budget, cab_ceil,
                        request=req, scale=sc)
              for i, (k, (req, sc, _)) in enumerate(sorted(cfgs.items()))]
     ceils = {"cab0": cab_ceil, "cab1": cab_ceil * 1.3}
-    ctl = FleetPowerController(policy="sensitivity" if sens else "even")
+    ctl = _make_controller(policy)
     alloc = ctl.redistribute(budget, nodes, t=1.0, cabinet_ceils=ceils)
     floors = {n.name: n.floor_w for n in nodes}
     alloc.assert_conserved(floors)

@@ -78,3 +78,38 @@ def test_phase_sequence_shape():
     names = [p.name for p in phases]
     assert names.count("gpu_compute_idle") == 2   # two SCF boundaries
     assert names[0] == "buildKKRMatrix"           # iteration starts with build
+
+
+# ---------------------------------------------------------------------------
+# the lifted ED machinery (repro.power.metrics) must reproduce the paper
+# layer bit-for-bit — the fleet Pareto controller ranks candidate grants
+# through the same shared functions, so this pin protects both callers
+# ---------------------------------------------------------------------------
+
+def test_lifted_ed_scores_bit_identical(table):
+    """EdMetric (registry, via the shared euclidean_distance_scores) ==
+    repro.core.euclidean_distance, exact float equality, every task."""
+    from repro.core import euclidean_distance
+    from repro.power import get_metric
+    ed = get_metric("ed")
+    for task in table.tasks():
+        assert ed.score(table, task) == euclidean_distance(table, task)
+
+
+def test_lifted_ed_cap_pick_bit_identical(table):
+    """optimal_cap('ed', ...) == ed_optimal_cap(...), same tie rule."""
+    from repro.power import optimal_cap
+    for task in table.tasks():
+        assert optimal_cap("ed", table, task) == ed_optimal_cap(table, task)
+
+
+def test_nearest_utopia_pick_matches_single_node_selection(table):
+    """The grant-space picker the fleet controller uses — keys + raw
+    (energy, runtime) pairs — lands on the identical cap as the
+    single-node ED selection for every task."""
+    from repro.power import nearest_utopia_pick
+    for task in table.tasks():
+        rows = table.for_task(task)
+        pick = nearest_utopia_pick([r.cap for r in rows],
+                                   [(r.energy, r.runtime) for r in rows])
+        assert pick == ed_optimal_cap(table, task)
